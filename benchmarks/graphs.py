@@ -1,0 +1,160 @@
+"""The paper's six benchmark workloads (Table 2) re-created in StitchIR.
+
+LR / W2V / RNN / BiRNN are the public tensorflow-examples models the paper
+uses; Speech and NMT are modeled on the paper's description of its in-house
+workloads (Speech: "complex interaction patterns among reduce, transpose,
+concat, and elementwise ops"; NMT: the Figure-3 attention softmax×BatchDot
+subgraph on marginal batched shapes, fused per the user decision).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import GraphBuilder, Module
+
+LR_DIM = (64, 16)          # batch, features
+W2V_DIM = (64, 32, 512)    # batch, embed dim, vocab
+RNN_STEPS = 6
+SPEECH_DIM = (8, 50, 40)   # batch, frames, filters
+NMT_DIM = (4, 8, 32, 16)   # batch, heads, seq, head_dim
+
+
+def lr_graph() -> Module:
+    """Logistic-regression training step: fwd + grads + SGD updates."""
+    b = GraphBuilder("LR")
+    B, D = LR_DIM
+    x = b.parameter("x", (B, D), jnp.float32)
+    y = b.parameter("y", (B, 1), jnp.float32)
+    W = b.parameter("W", (D, 1), jnp.float32)
+    bias = b.parameter("b", (1,), jnp.float32)
+    z = b.dot(x, W)                                    # LC
+    p = b.sigmoid(z + b.broadcast(bias, (B, 1), (1,)))
+    e = p - y
+    xt = b.transpose(x, (1, 0))
+    dW = b.dot(xt, e)                                  # LC
+    _W2 = W - dW * 0.1                                 # update kernel
+    db = b.reduce(e, (0, 1), "mean")
+    _b2 = bias - b.broadcast(db, (1,), ()) * 0.1
+    # loss for logging: -(y log p + (1-y) log(1-p))
+    lp = b.log(b.maximum(p, 1e-6))
+    ln = b.log(b.maximum(1.0 - p, 1e-6))
+    _loss = b.reduce(0.0 - (y * lp + (1.0 - y) * ln), (0, 1), "mean")
+    return b.module
+
+
+def w2v_graph() -> Module:
+    """Word2vec negative-sampling step: gathers + elementwise grads."""
+    b = GraphBuilder("W2V")
+    B, D, V = W2V_DIM
+    t_in = b.parameter("emb_in", (V, D), jnp.float32)
+    t_out = b.parameter("emb_out", (V, D), jnp.float32)
+    idx = b.parameter("center", (B,), jnp.int32)
+    ctx = b.parameter("context", (B,), jnp.int32)
+    lbl = b.parameter("label", (B,), jnp.float32)
+    ein = b.gather(t_in, idx)                          # (B, D)
+    eout = b.gather(t_out, ctx)
+    score = b.reduce(ein * eout, (1,), "sum")          # (B,)
+    p = b.sigmoid(score)
+    g = p - lbl
+    gb = b.broadcast(g, (B, D), (0,))
+    _d_in = ein - gb * eout * 0.05                     # updated rows
+    _d_out = eout - gb * ein * 0.05
+    return b.module
+
+
+def _rnn_cell(b, x_t, h, Wx, Wh, bias, tag):
+    a = b.dot(x_t, Wx)                                 # LC
+    c = b.dot(h, Wh)                                   # LC
+    s = a + c + b.broadcast(bias, a.shape, (1,))
+    return b.tanh(s)
+
+
+def rnn_graph(steps: int = RNN_STEPS, name="RNN") -> Module:
+    b = GraphBuilder(name)
+    B, D, H = 16, 24, 32
+    Wx = b.parameter("Wx", (D, H), jnp.float32)
+    Wh = b.parameter("Wh", (H, H), jnp.float32)
+    bias = b.parameter("b", (H,), jnp.float32)
+    h = b.parameter("h0", (B, H), jnp.float32)
+    for t in range(steps):
+        x_t = b.parameter(f"x{t}", (B, D), jnp.float32)
+        h = _rnn_cell(b, x_t, h, Wx, Wh, bias, t)
+    Wo = b.parameter("Wo", (H, 8), jnp.float32)
+    logits = b.dot(h, Wo)                              # LC
+    _probs = b.softmax(logits, dim=-1)
+    return b.module
+
+
+def birnn_graph(steps: int = RNN_STEPS) -> Module:
+    b = GraphBuilder("BiRNN")
+    B, D, H = 16, 24, 32
+    xs = [b.parameter(f"x{t}", (B, D), jnp.float32) for t in range(steps)]
+    hf = b.parameter("hf0", (B, H), jnp.float32)
+    hb = b.parameter("hb0", (B, H), jnp.float32)
+    Wxf = b.parameter("Wxf", (D, H), jnp.float32)
+    Whf = b.parameter("Whf", (H, H), jnp.float32)
+    bf = b.parameter("bf", (H,), jnp.float32)
+    Wxb = b.parameter("Wxb", (D, H), jnp.float32)
+    Whb = b.parameter("Whb", (H, H), jnp.float32)
+    bb = b.parameter("bb", (H,), jnp.float32)
+    for t in range(steps):
+        hf = _rnn_cell(b, xs[t], hf, Wxf, Whf, bf, f"f{t}")
+    for t in reversed(range(steps)):
+        hb = _rnn_cell(b, xs[t], hb, Wxb, Whb, bb, f"b{t}")
+    hcat = b.concat([hf, hb], dim=1)                   # (B, 2H)
+    Wo = b.parameter("Wo", (2 * H, 8), jnp.float32)
+    _out = b.softmax(b.dot(hcat, Wo), dim=-1)
+    return b.module
+
+
+def speech_graph() -> Module:
+    """Acoustic frontend head: square/log/reduce/transpose/concat mix."""
+    b = GraphBuilder("Speech")
+    B, T, F = SPEECH_DIM
+    x = b.parameter("frames", (B, T, F), jnp.float32)
+    mel_w = b.parameter("mel", (F, F), jnp.float32)
+    power = b.square(x)
+    flat = b.reshape(power, (B * T, F))
+    mel = b.dot(flat, mel_w)                           # LC
+    lg = b.log(b.maximum(b.reshape(mel, (B, T, F)), 1e-6))
+    # per-utterance mean/var normalization (column reduces over time)
+    mu = b.reduce(lg, (1,), "mean")                    # (B, F)
+    mub = b.broadcast(mu, (B, T, F), (0, 2))
+    cen = lg - mub
+    var = b.reduce(b.square(cen), (1,), "mean")
+    inv = b.rsqrt(var + 1e-5)
+    norm = cen * b.broadcast(inv, (B, T, F), (0, 2))
+    # transpose to feature-major and append a scaled copy (delta stand-in)
+    tr = b.transpose(norm, (0, 2, 1))                  # (B, F, T)
+    delta = tr * 0.5 + 0.1
+    feats = b.concat([tr, delta], dim=1)               # (B, 2F, T)
+    gate = b.sigmoid(feats)
+    _out = b.reduce(gate * feats, (2,), "mean")        # (B, 2F)
+    return b.module
+
+
+def nmt_graph(fuse_dot: bool = True) -> Module:
+    """The paper's Figure-3 subgraph: softmax stitched with BatchMatMul."""
+    b = GraphBuilder("NMT")
+    B, H, S, D = NMT_DIM
+    q = b.parameter("q", (B, H, S, D), jnp.float32)
+    k = b.parameter("k", (B, H, S, D), jnp.float32)
+    v = b.parameter("v", (B, H, S, D), jnp.float32)
+    bias = b.parameter("bias", (S, S), jnp.float32)
+    kt = b.transpose(k, (0, 1, 3, 2))
+    scores = b.dot(q, kt, fusable=fuse_dot)            # marginal batched shape
+    scaled = scores * (1.0 / D ** 0.5) + b.broadcast(bias, scores.shape, (2, 3))
+    p = b.softmax(scaled, dim=-1)
+    ctx = b.dot(p, v, fusable=fuse_dot)                # Dot.1 of Figure 3
+    _out = b.tanh(ctx)
+    return b.module
+
+
+ALL_GRAPHS = {
+    "LR": lr_graph,
+    "W2V": w2v_graph,
+    "RNN": rnn_graph,
+    "BiRNN": birnn_graph,
+    "Speech": speech_graph,
+    "NMT": nmt_graph,
+}

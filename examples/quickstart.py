@@ -1,0 +1,69 @@
+"""Quickstart: compile the paper's Figure-3 pattern with FusionStitching.
+
+Builds softmax(QKᵀ/√d)·V in StitchIR, runs the full pipeline (Work/Span
+deep fusion → schedule tuning → VMEM planning → stitched Pallas codegen),
+validates against the pure-jnp oracle, and prints the paper's metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core import (  # noqa: E402
+    StitchOptions,
+    compile_module,
+    critical_path_length,
+    reference_execute,
+    trace,
+)
+
+
+def attention(b, q, k, v):
+    """The motivating example: BatchMatMul stitched with softmax."""
+    kt = b.transpose(k, (0, 1, 3, 2))
+    scores = b.dot(q, kt, fusable=True) * (1.0 / q.shape[-1] ** 0.5)
+    p = b.softmax(scores, dim=-1)           # max, sub, exp, sum, div
+    return b.dot(p, v, fusable=True)        # Dot.1 in Figure 3
+
+
+def main():
+    B, H, S, D = 2, 4, 16, 32
+    module = trace(
+        attention,
+        ("q", (B, H, S, D), jnp.float32),
+        ("k", (B, H, S, D), jnp.float32),
+        ("v", (B, H, S, D), jnp.float32),
+        name="fig3",
+    )
+    print(f"StitchIR module: {len(module.instructions)} instructions, "
+          f"critical path {critical_path_length(module)}")
+
+    compiled = compile_module(module, StitchOptions(max_blocks=32))
+    s = compiled.stats
+    print(f"stitched kernels : {s.stitched_kernels}")
+    print(f"standalone       : {s.standalone_kernels}")
+    print(f"XLA baseline     : {s.xla_baseline_kernels} kernels")
+    print(f"fusion ratio     : {s.fusion_ratio:.3f}  "
+          f"({(1 - s.fusion_ratio) * 100:.0f}% fewer launches)")
+    for r in s.reports:
+        print(f"  kernel {r.name}: {r.num_ops} ops, {r.blocks} blocks, "
+              f"{r.scratch_bytes}B VMEM scratch "
+              f"({r.shared_bytes}B shared), roots={r.roots}")
+
+    rng = np.random.RandomState(0)
+    feeds = {n: rng.randn(B, H, S, D).astype("f4") for n in ("q", "k", "v")}
+    ref = reference_execute(module, feeds)
+    out = compiled(feeds)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
+        )
+    print("stitched kernels match the jnp oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — FusionStitching (Long et al., 2018) reproduced as a production
+JAX/Pallas TPU framework: stitching compiler core, stitched kernels, model
+zoo, distributed training/serving substrate, multi-pod launch tooling."""
+__version__ = "1.0.0"

@@ -1,0 +1,41 @@
+"""FusionStitching core: StitchIR, deep fusion, schedule planning, VMEM
+memory planning, and IrEmitterStitched Pallas code generation."""
+from .compiler import CompiledModule, CompileStats, StitchOptions, compile_module
+from .executor import StitchedExecutable, reference_execute
+from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
+from .ir import (
+    GraphBuilder,
+    Instruction,
+    Module,
+    Tensor,
+    apply_op,
+    trace,
+)
+from .memory import MemoryInfeasible, MemoryPlan, plan_memory
+from .perf_library import CostModel, PerfLibrary, TPU_V5E, TpuSpec
+from .schedule import (
+    REPLICATED,
+    Sched,
+    ScheduleSolution,
+    Unsatisfiable,
+    blocks_of,
+    candidate_schedules,
+    chunk_shape,
+    propagate,
+    resolve_schedules,
+)
+from .span import compute_spans, critical_path_length, layers
+from .tuning import TunedPlan, tune
+from .xla_baseline import xla_baseline_groups, xla_baseline_kernel_count
+
+__all__ = [
+    "CompiledModule", "CompileStats", "StitchOptions", "compile_module",
+    "StitchedExecutable", "reference_execute", "FusedComputation",
+    "FusionConfig", "FusionPlan", "deep_fuse", "GraphBuilder", "Instruction",
+    "Module", "Tensor", "apply_op", "trace", "MemoryInfeasible", "MemoryPlan",
+    "plan_memory", "CostModel", "PerfLibrary", "TPU_V5E", "TpuSpec",
+    "REPLICATED", "Sched", "ScheduleSolution", "Unsatisfiable", "blocks_of",
+    "candidate_schedules", "chunk_shape", "propagate", "resolve_schedules",
+    "compute_spans", "critical_path_length", "layers", "TunedPlan", "tune",
+    "xla_baseline_groups", "xla_baseline_kernel_count",
+]

@@ -1,0 +1,213 @@
+"""IrEmitterStitched — block-composition code generation (paper §5.2).
+
+Emits ONE ``pl.pallas_call`` per fused computation:
+
+  * the launch grid is ``(blocks,)`` — the paper's CTA count, here the
+    Pallas grid (TPU grid programs pipeline HBM->VMEM DMAs);
+  * every fusion input/output gets a ``BlockSpec`` whose block shape is the
+    propagated schedule's chunk and whose ``index_map`` is the schedule's
+    block-index arithmetic;
+  * ops whose MemoryPlan action is ALLOC/SHARE write their block tile into a
+    VMEM scratch ref (``pltpu.VMEM`` via ``scratch_shapes``) and consumers
+    read it back — block composition through scratchpad, exactly the paper's
+    shared-memory stitching; slot sharing from the dominance-tree plan reuses
+    one scratch ref for several ops;
+  * INLINE ops are evaluated as straight vector expressions — thread
+    composition (XLA's elemental emitter analogue, Algorithm 2's fallback
+    branch).
+
+The same ``apply_op`` interpreter evaluates ops here (on VMEM tiles) and in
+the reference executor (on full arrays), so kernels match the oracle by
+construction up to float reassociation.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces; interpret mode accepts them on CPU too
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except ImportError:  # pragma: no cover
+    _VMEM = None
+
+from .fusion import FusedComputation
+from .ir import Instruction, apply_op
+from .memory import ALLOC, INLINE, SHARE, MemoryPlan
+from .schedule import (
+    REPLICATED,
+    Sched,
+    ScheduleSolution,
+    block_index,
+    chunk_shape,
+    propagate,
+)
+
+
+def _starts(shape, sched: Sched, b):
+    idx = block_index(shape, sched, b)
+    cs = chunk_shape(shape, sched)
+    return tuple(i * c for i, c in zip(idx, cs))
+
+
+def _adapt(val, opnd: Instruction, stored: Sched, needed: Sched, b):
+    """Convert an operand's stored form to the consumer's needed form."""
+    if stored == needed:
+        return val
+    if stored.kind == "replicated" and needed.kind == "chunked":
+        return jax.lax.dynamic_slice(
+            val, _starts(opnd.shape, needed, b), chunk_shape(opnd.shape, needed)
+        )
+    if needed.kind == "replicated" and stored.kind == "replicated":
+        return val
+    raise AssertionError(
+        f"cannot adapt {opnd.name}: stored {stored}, needed {needed}"
+    )
+
+
+def _emit_instr(instr: Instruction, sched: Sched, ovals: List, b):
+    """Evaluate one instruction on block tiles (thread-composition body)."""
+    op = instr.opcode
+    a = instr.attrs
+    out_chunk = chunk_shape(instr.shape, sched)
+
+    if op in ("reshape", "bitcast"):
+        return jnp.reshape(ovals[0], out_chunk)
+
+    if op == "broadcast":
+        dims = tuple(a["dims"])
+        opnd = instr.operands[0]
+        v = ovals[0]
+        if sched.kind == "chunked" and tuple(v.shape) == tuple(opnd.shape):
+            # replicated operand feeding a chunked broadcast: slice the
+            # operand window this block's output chunk maps onto.
+            ost = _starts(instr.shape, sched, b)
+            starts = tuple(
+                ost[dims[j]] if opnd.shape[j] != 1 else 0
+                for j in range(len(dims))
+            )
+            sizes = tuple(
+                out_chunk[dims[j]] if opnd.shape[j] != 1 else 1
+                for j in range(len(dims))
+            )
+            v = jax.lax.dynamic_slice(v, starts, sizes)
+        return jax.lax.broadcast_in_dim(v, out_chunk, dims)
+
+    if op == "iota":
+        d = a["dim"]
+        base = jax.lax.broadcasted_iota(instr.dtype, out_chunk, d)
+        if sched.kind == "chunked":
+            start = _starts(instr.shape, sched, b)[d]
+            base = base + jnp.asarray(start, dtype=instr.dtype)
+        return base
+
+    return apply_op(instr, *ovals)
+
+
+@dataclass
+class StitchedKernel:
+    """A compiled stitched kernel: call with input arrays in ``inputs`` order."""
+
+    fusion: FusedComputation
+    solution: ScheduleSolution
+    plan: MemoryPlan
+    fn: Callable
+    inputs: List[Instruction]
+    outputs: List[Instruction]
+
+    @property
+    def blocks(self) -> int:
+        return self.solution.blocks
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+
+def emit_fusion(
+    fusion: FusedComputation,
+    solution: ScheduleSolution,
+    plan: MemoryPlan,
+    interpret: bool = True,
+) -> StitchedKernel:
+    members = fusion.members
+    roots = fusion.roots
+    inputs = fusion.inputs
+    assign = solution.assignment
+    blocks = solution.blocks
+    member_ids = {m.id for m in members}
+
+    def in_spec(instr: Instruction) -> pl.BlockSpec:
+        sched = assign.get(instr.id, REPLICATED)
+        cs = chunk_shape(instr.shape, sched)
+        return pl.BlockSpec(
+            cs, functools.partial(block_index, tuple(instr.shape), sched)
+        )
+
+    in_specs = [in_spec(i) for i in inputs]
+    out_specs = [in_spec(r) for r in roots]
+    out_shape = [jax.ShapeDtypeStruct(tuple(r.shape), r.dtype) for r in roots]
+    scratch_shapes = []
+    if _VMEM is not None:
+        for sshape, sdtype in plan.slots:
+            scratch_shapes.append(_VMEM(tuple(sshape), np.dtype(sdtype)))
+
+    n_in, n_out = len(inputs), len(roots)
+    root_pos = {r.id: j for j, r in enumerate(roots)}
+
+    def kernel(*refs):
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in: n_in + n_out]
+        scratch = refs[n_in + n_out:]
+        b = pl.program_id(0)
+
+        stored: Dict[int, Sched] = {}
+        vals: Dict[int, object] = {}
+        for i, instr in enumerate(inputs):
+            vals[instr.id] = in_refs[i][...]
+            stored[instr.id] = assign.get(instr.id, REPLICATED)
+
+        for m in members:
+            sched = assign[m.id]
+            if m.opcode == "constant":
+                vals[m.id] = apply_op(m)
+                stored[m.id] = REPLICATED
+                continue
+            needed = propagate(m, sched)
+            ovals = [
+                _adapt(vals[o.id], o, stored[o.id], ns, b)
+                for o, ns in zip(m.operands, needed)
+            ]
+            v = _emit_instr(m, sched, ovals, b)
+            entry = plan.entries.get(m.id)
+            if entry is not None and entry.action in (ALLOC, SHARE) and scratch:
+                # block composition: stitch through the VMEM scratch slot
+                ref = scratch[entry.slot]
+                ref[...] = v
+                v = ref[...]
+            vals[m.id] = v
+            stored[m.id] = sched
+            if m.id in root_pos:
+                out_refs[root_pos[m.id]][...] = v
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )
+
+    def fn(*args):
+        outs = call(*args)
+        return outs if isinstance(outs, (list, tuple)) else (outs,)
+
+    return StitchedKernel(fusion, solution, plan, fn, inputs, roots)

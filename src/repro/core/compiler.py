@@ -1,0 +1,212 @@
+"""The FusionStitching compiler pipeline — paper Fig. 4.
+
+HloModule (StitchIR) -> computation fusion -> schedule planning -> code
+generation, with the memory-planning feedback loop into the
+ScheduleConsistencyChecker (§5.1.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import span as span_lib
+from .codegen import StitchedKernel, emit_fusion
+from .executor import StitchedExecutable
+from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
+from .ir import Module
+from .memory import MemoryInfeasible, MemoryPlan, plan_memory
+from .perf_library import CostModel, PerfLibrary
+from .schedule import any_satisfiable
+from .tuning import TunedPlan, tune
+from .xla_baseline import xla_baseline_kernel_count
+
+
+@dataclass
+class StitchOptions:
+    fuse_dot: bool = True                    # user decision (paper §2.1)
+    vmem_limit: int = 4 * 1024 * 1024        # scratch budget per kernel
+    replicate_limit: int = 512 * 1024
+    max_blocks: int = 4096
+    ew_footprint_limit: int = 64 * 1024 * 1024
+    max_fusion_ops: int = 256
+    perf_library_path: Optional[str] = None
+    interpret: bool = True                   # CPU validation; False on TPU
+
+
+@dataclass
+class FusionReport:
+    name: str
+    num_ops: int
+    blocks: int
+    cost_s: float
+    scratch_bytes: int
+    shared_bytes: int
+    num_shrinks: int
+    roots: List[str]
+
+
+@dataclass
+class CompileStats:
+    stitched_kernels: int
+    standalone_kernels: int
+    library_calls: int
+    xla_baseline_kernels: int
+    predicted_time_s: float
+    library_time_s: float = 0.0
+    reports: List[FusionReport] = field(default_factory=list)
+
+    @property
+    def fusion_ratio(self) -> float:
+        """paper Fig. 7: our kernel count / XLA baseline kernel count."""
+        ours = self.stitched_kernels + self.standalone_kernels
+        return ours / self.xla_baseline_kernels if self.xla_baseline_kernels else 1.0
+
+    @property
+    def smem_average(self) -> float:
+        allocs = [r.scratch_bytes for r in self.reports]
+        return float(np.mean(allocs)) if allocs else 0.0
+
+    @property
+    def smem_max(self) -> int:
+        return max((r.scratch_bytes for r in self.reports), default=0)
+
+    @property
+    def total_shrinks(self) -> int:
+        return sum(r.num_shrinks for r in self.reports)
+
+    @property
+    def shared_ratio(self) -> float:
+        tot = sum(r.scratch_bytes for r in self.reports)
+        sh = sum(r.shared_bytes for r in self.reports)
+        return sh / tot if tot else 0.0
+
+
+class CompiledModule:
+    def __init__(self, executable: StitchedExecutable, stats: CompileStats):
+        self.executable = executable
+        self.stats = stats
+
+    def __call__(self, feeds):
+        return self.executable(feeds)
+
+
+def compile_module(
+    module: Module, options: Optional[StitchOptions] = None
+) -> CompiledModule:
+    opts = options or StitchOptions()
+    lib = PerfLibrary(opts.perf_library_path)
+
+    # --- ScheduleConsistencyChecker with memory feedback (Fig. 4) --------
+    def consistency(roots, members) -> bool:
+        sol = any_satisfiable(
+            members,
+            roots,
+            replicate_limit=opts.replicate_limit,
+            max_blocks=opts.max_blocks,
+        )
+        if sol is None:
+            return False
+        try:
+            plan_memory(members, roots, sol, opts.vmem_limit)
+        except MemoryInfeasible:
+            return False
+        return True
+
+    fcfg = FusionConfig(
+        fuse_dot=opts.fuse_dot,
+        ew_footprint_limit=opts.ew_footprint_limit,
+        max_fusion_ops=opts.max_fusion_ops,
+        consistency=consistency,
+    )
+    plan = deep_fuse(module, fcfg)
+
+    kernels: Dict[str, StitchedKernel] = {}
+    reports: List[FusionReport] = []
+    predicted = 0.0
+    final_fusions: List[FusedComputation] = []
+    extra_standalone = []
+
+    for fusion in plan.fusions:
+        members, roots = fusion.members, fusion.roots
+        tuned = tune(
+            members,
+            roots,
+            lib,
+            max_blocks=opts.max_blocks,
+            replicate_limit=opts.replicate_limit,
+        )
+        mem: Optional[MemoryPlan] = None
+        # memory feedback loop: drop deepest members until the plan fits
+        while tuned is not None:
+            try:
+                mem = plan_memory(members, roots, tuned.solution, opts.vmem_limit)
+                break
+            except MemoryInfeasible:
+                if len(members) <= 1:
+                    tuned = None
+                    break
+                members = members[:-1]
+                fusion = FusedComputation(members, name=fusion.name)
+                roots = fusion.roots
+                tuned = tune(
+                    members,
+                    roots,
+                    lib,
+                    max_blocks=opts.max_blocks,
+                    replicate_limit=opts.replicate_limit,
+                )
+        if tuned is None or mem is None:
+            # unfusable after all: emit every member standalone
+            extra_standalone.extend(fusion.members)
+            continue
+        kernel = emit_fusion(fusion, tuned.solution, mem, interpret=opts.interpret)
+        kernels[fusion.name] = kernel
+        final_fusions.append(fusion)
+        predicted += tuned.cost_s
+        reports.append(
+            FusionReport(
+                fusion.name,
+                len(members),
+                tuned.solution.blocks,
+                tuned.cost_s,
+                mem.total_bytes,
+                mem.shared_bytes,
+                mem.num_shrinks,
+                [r.name for r in roots],
+            )
+        )
+
+    plan = FusionPlan(final_fusions, plan.standalone + extra_standalone, module)
+    library_time = 0.0
+    for s in plan.standalone:
+        # standalone kernels are costed as single-op launches; library-call
+        # time (cuBLAS/MXU dots) is tracked separately — it is common to the
+        # baseline and the stitched build (paper Fig. 6/8 methodology).
+        t = lib.model.kernel_time(1, lib.model.op_time(s, _whole(s), 1))
+        if s.is_library_call:
+            library_time += t
+        else:
+            predicted += t
+
+    executable = StitchedExecutable(module, plan, kernels)
+    st = executable.launch_stats()
+    stats = CompileStats(
+        stitched_kernels=st.stitched_kernels,
+        standalone_kernels=st.standalone_kernels,
+        library_calls=st.library_calls,
+        xla_baseline_kernels=xla_baseline_kernel_count(module),
+        predicted_time_s=predicted,
+        library_time_s=library_time,
+        reports=reports,
+    )
+    if opts.perf_library_path:
+        lib.save()
+    return CompiledModule(executable, stats)
+
+
+def _whole(instr):
+    from .schedule import REPLICATED
+
+    return REPLICATED

@@ -1,0 +1,296 @@
+"""Deep fusion — paper §3.2 (ElementwiseFusion + Algorithm 1).
+
+The driver walks layers bottom-up (span 0 upward).  At each *root layer* it
+first performs intra-layer ElementwiseFusion (horizontal fusion of
+independent same-shape elementwise ops — the weight-accumulation pattern in
+training graphs), then runs Algorithm 1 from every fusion seed in the layer,
+fusing producer instructions layer-by-layer up to the *roof* (the next
+library-call layer).
+
+``SchdConsistent`` is injected by the compiler pipeline: it asks the schedule
+planner whether an optimized schedule still exists for the enlarged fusion,
+and the memory planner's infeasibility feedback arrives through the same
+callable (paper §5.1.2 — "a feedback signal is generated back to
+ScheduleConsistencyChecker").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from .ir import Instruction, Module
+from . import span as span_lib
+
+# Opcodes that may live inside a fused computation.
+FUSABLE_OPCODES = frozenset(
+    {
+        "elementwise", "select", "reshape", "bitcast", "transpose",
+        "broadcast", "reduce", "concat", "gather", "iota", "constant",
+    }
+)
+
+
+def fusable_member(instr: Instruction, fuse_dot: bool) -> bool:
+    if instr.opcode == "dot":
+        return fuse_dot and instr.attrs.get("fusable", False)
+    return instr.opcode in FUSABLE_OPCODES
+
+
+def constant_like(instr: Instruction) -> bool:
+    """Constant-derived data-movement chains (constant/iota + shape ops over
+    them).  These never launch a kernel — XLA folds them — and the paper
+    inlines trivial ops via thread composition; they are absorbed into any
+    consumer fusion regardless of layer roofs and never counted standalone.
+    """
+    if instr.opcode in ("constant", "iota"):
+        return True
+    if instr.opcode in ("broadcast", "reshape", "bitcast", "transpose"):
+        return all(constant_like(o) for o in instr.operands)
+    return False
+
+
+@dataclass
+class FusedComputation:
+    """A group of instructions emitted as ONE stitched kernel."""
+
+    members: List[Instruction]           # topological order
+    name: str = "fusion"
+
+    def __post_init__(self):
+        ids = {m.id for m in self.members}
+        self._ids = ids
+
+    def __contains__(self, instr: Instruction) -> bool:
+        return instr.id in self._ids
+
+    @property
+    def roots(self) -> List[Instruction]:
+        """Outputs: members used outside the fusion (or module sinks)."""
+        out = []
+        for m in self.members:
+            if not m.users or any(u.id not in self._ids for u in m.users):
+                out.append(m)
+        return out
+
+    @property
+    def inputs(self) -> List[Instruction]:
+        seen, out = set(), []
+        for m in self.members:
+            for op in m.operands:
+                if op.id not in self._ids and op.id not in seen:
+                    seen.add(op.id)
+                    out.append(op)
+        return out
+
+    def footprint_bytes(self) -> int:
+        return sum(i.bytesize for i in self.inputs) + sum(
+            r.bytesize for r in self.roots
+        )
+
+    def __repr__(self):
+        return (
+            f"FusedComputation({self.name}: {len(self.members)} ops, "
+            f"roots={[r.name for r in self.roots]})"
+        )
+
+
+@dataclass
+class FusionPlan:
+    fusions: List[FusedComputation]
+    standalone: List[Instruction]        # unfused kernel launches (incl. LC dots)
+    module: Module
+
+    @property
+    def num_kernels(self) -> int:
+        """Kernel launches excluding library calls (paper's Fig-7 metric)."""
+        return len(self.fusions) + sum(
+            1 for s in self.standalone if not s.is_library_call
+        )
+
+    @property
+    def num_library_calls(self) -> int:
+        return sum(1 for s in self.standalone if s.is_library_call)
+
+
+@dataclass
+class FusionConfig:
+    fuse_dot: bool = True                 # user decision, paper §2.1
+    ew_footprint_limit: int = 64 * 1024 * 1024   # ElementwiseFusion threshold
+    max_fusion_ops: int = 256
+    # SchdConsistent(roots, tentative_members) -> bool.  Injected by the
+    # compiler; defaults to permissive for structural tests.
+    consistency: Callable[[List[Instruction], List[Instruction]], bool] = (
+        lambda roots, members: True
+    )
+
+
+def _topo_sorted(members: Set[Instruction], module: Module) -> List[Instruction]:
+    ids = {m.id for m in members}
+    return [i for i in module.instructions if i.id in ids]
+
+
+def _elementwise_groups(
+    layer: List[Instruction], assigned: Set[int], cfg: FusionConfig
+) -> List[List[Instruction]]:
+    """Group independent same-layer elementwise ops by output shape, chunked
+    by the footprint threshold (paper §3.2 ElementwiseFusion)."""
+    by_shape: Dict[tuple, List[Instruction]] = {}
+    for instr in layer:
+        if instr.id in assigned or not instr.is_elementwise:
+            continue
+        by_shape.setdefault((instr.shape, str(instr.dtype)), []).append(instr)
+    groups = []
+    for _, instrs in sorted(by_shape.items(), key=lambda kv: str(kv[0])):
+        cur, cur_bytes = [], 0
+        for i in instrs:
+            fp = i.footprint_bytes()
+            if cur and cur_bytes + fp > cfg.ew_footprint_limit:
+                groups.append(cur)
+                cur, cur_bytes = [], 0
+            cur.append(i)
+            cur_bytes += fp
+        if cur:
+            groups.append(cur)
+    # Only multi-op groups constitute a horizontal fusion seed.
+    return [g for g in groups if len(g) >= 2]
+
+
+def _would_cycle(hlo: Instruction, fused: Set[Instruction]) -> bool:
+    """True if fusing ``hlo`` creates a group-level dependence cycle: a path
+    from ``hlo`` through outside-the-fusion consumers back to an input of the
+    fusion.  (The paper collapses fusions into single HLO instructions after
+    each pass, which makes such cycles visible structurally; with virtual
+    groups we check reachability explicitly.)"""
+    stack = [u for u in hlo.users if u not in fused]
+    seen: Set[int] = set()
+    while stack:
+        n = stack.pop()
+        if n.id in seen:
+            continue
+        seen.add(n.id)
+        if any(u in fused for u in n.users):
+            return True
+        stack.extend(u for u in n.users if u not in fused)
+    return False
+
+
+def subgraph_fuse(
+    seed: List[Instruction],
+    module: Module,
+    span: Dict[int, int],
+    layer_map: Dict[int, List[Instruction]],
+    roof: int,
+    assigned: Set[int],
+    cfg: FusionConfig,
+) -> List[Instruction]:
+    """Algorithm 1: fuse producers layer-by-layer from the seed up to roof."""
+    fused: Set[Instruction] = set(seed)
+    giveup: Set[Instruction] = set()
+    roots = list(seed)
+    curr_span = max(span[s.id] for s in seed)
+    # The roof layer's NON-library ops are fusable (only the library call
+    # itself is a boundary); constant-like producers get a final absorption
+    # pass below, unbounded by roofs.
+    for l in range(curr_span + 1, roof + 1):
+        for hlo in layer_map.get(l, ()):
+            if hlo.id in assigned or hlo in fused:
+                continue
+            if not fusable_member(hlo, cfg.fuse_dot):
+                continue
+            if len(fused) >= cfg.max_fusion_ops:
+                return _topo_sorted(fused, module)
+            # --- SchdConsistent (paper §3.2) -----------------------------
+            if any(u in giveup for u in hlo.users):
+                giveup.add(hlo)            # poisoned: avoid dependence loops
+                continue
+            if not any(u in fused for u in hlo.users):
+                continue                   # producer/consumer fusion only
+            if _would_cycle(hlo, fused):
+                giveup.add(hlo)
+                continue
+            tentative = _topo_sorted(fused | {hlo}, module)
+            if cfg.consistency(roots, tentative):
+                fused.add(hlo)
+            else:
+                giveup.add(hlo)
+    return _topo_sorted(fused, module)
+
+
+def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
+    """The full deep-fusion driver (paper §3.2)."""
+    cfg = cfg or FusionConfig()
+    span = span_lib.compute_spans(module)
+    layer_map = span_lib.layers(module, span)
+    max_span = max(span.values()) if span else 0
+    lcs = span_lib.lc_spans(module, span)
+
+    assigned: Set[int] = set()
+    fusions: List[FusedComputation] = []
+    forced_standalone: List[Instruction] = []
+
+    for root_span in range(0, max_span + 1):
+        layer = layer_map.get(root_span, [])
+        roof = span_lib.roof_for(root_span, lcs, max_span)
+
+        # -- step 1: intra-layer ElementwiseFusion ------------------------
+        seeds: List[List[Instruction]] = _elementwise_groups(layer, assigned, cfg)
+        claimed = {i.id for g in seeds for i in g}
+        # -- step 2: every remaining fusable instruction seeds Algorithm 1
+        for instr in layer:
+            if instr.id in assigned or instr.id in claimed:
+                continue
+            if instr.opcode in ("parameter", "constant", "iota"):
+                continue
+            if constant_like(instr):
+                continue  # folded at compile time; absorbed where consumed
+            if not fusable_member(instr, cfg.fuse_dot):
+                continue
+            seeds.append([instr])
+
+        for seed in seeds:
+            if not cfg.consistency(seed, seed):
+                # even the seed alone has no valid schedule — leave standalone
+                for s in seed:
+                    assigned.add(s.id)
+                    forced_standalone.append(s)
+                continue
+            members = subgraph_fuse(
+                seed, module, span, layer_map, roof, assigned, cfg
+            )
+            for m in members:
+                assigned.add(m.id)
+            fusions.append(FusedComputation(members, name=f"f{len(fusions)}"))
+
+    # --- final pass: absorb constant-like producer chains (free ops) -----
+    absorbed_fusions: List[FusedComputation] = []
+    for f in fusions:
+        members = set(f.members)
+        stack = [o for m in f.members for o in m.operands]
+        while stack:
+            o = stack.pop()
+            if o in members or o.id in assigned or o.opcode == "parameter":
+                continue
+            if constant_like(o):
+                members.add(o)
+                assigned.add(o.id)
+                stack.extend(o.operands)
+        absorbed_fusions.append(
+            FusedComputation(_topo_sorted(members, module), name=f.name)
+        )
+    fusions = absorbed_fusions
+
+    standalone = forced_standalone + [
+        i
+        for i in module.instructions
+        if i.id not in assigned
+        and i.opcode not in ("parameter", "constant")
+        and not constant_like(i)
+    ]
+    # Drop trivial single-op "fusions" of free ops back to standalone
+    real_fusions, extra = [], []
+    for f in fusions:
+        if len(f.members) == 1 and f.members[0].opcode in ("iota",):
+            extra.append(f.members[0])
+        else:
+            real_fusions.append(f)
+    return FusionPlan(real_fusions, standalone + extra, module)

@@ -1,0 +1,519 @@
+"""StitchIR — an HloModule-like tensor IR for FusionStitching.
+
+The paper operates on XLA HloModules restricted to four op families:
+elementwise, shape modulation (reshape/bitcast/transpose/broadcast),
+reduction, and BatchMatMul.  StitchIR mirrors that op set (plus the small
+extras the paper's benchmark graphs need: concat, select, gather, iota,
+constants) and provides:
+
+  * ``Instruction`` / ``Module``   — the graph.
+  * ``GraphBuilder`` + ``Tensor``  — a jnp-like tracing frontend.
+  * ``apply_op``                   — one jnp interpreter for a single
+    instruction, shared by the reference executor *and* the Pallas kernel
+    body emitter, so the oracle and the generated kernels are consistent
+    by construction.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Op taxonomy (paper §2.1)
+# --------------------------------------------------------------------------
+
+ELEMENTWISE_UNARY: Dict[str, Callable] = {
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "neg": jnp.negative,
+    "abs": jnp.abs,
+    "tanh": jnp.tanh,
+    "sqrt": jnp.sqrt,
+    "rsqrt": jax.lax.rsqrt,
+    "sigmoid": jax.nn.sigmoid,
+    "softplus": jax.nn.softplus,
+    "sign": jnp.sign,
+    "floor": jnp.floor,
+    "not": jnp.logical_not,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "square": jnp.square,
+    "reciprocal": lambda x: 1.0 / x,
+}
+
+ELEMENTWISE_BINARY: Dict[str, Callable] = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "pow": jnp.power,
+    "lt": jnp.less,
+    "le": jnp.less_equal,
+    "gt": jnp.greater,
+    "ge": jnp.greater_equal,
+    "eq": jnp.equal,
+    "ne": jnp.not_equal,
+    "and": jnp.logical_and,
+    "or": jnp.logical_or,
+}
+
+# Ops the paper calls "expensive elementwise" (§5.1.1): transcendental or
+# division-class VPU ops whose recomputation (thread composition) is costly.
+EXPENSIVE_ELEMENTWISE = frozenset(
+    {
+        "exp", "log", "div", "tanh", "sqrt", "rsqrt", "sigmoid", "softplus",
+        "pow", "silu", "gelu", "reciprocal",
+    }
+)
+
+REDUCE_KINDS: Dict[str, Callable] = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+    "prod": jnp.prod,
+    "mean": jnp.mean,
+}
+
+SHAPE_OPS = frozenset({"reshape", "bitcast", "transpose", "broadcast"})
+
+_COMPARE_FNS = frozenset({"lt", "le", "gt", "ge", "eq", "ne", "and", "or", "not"})
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Instruction
+# --------------------------------------------------------------------------
+
+_uid = itertools.count()
+
+
+@dataclass(eq=False)
+class Instruction:
+    opcode: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    operands: List["Instruction"] = field(default_factory=list)
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    name: str = ""
+    id: int = field(default_factory=lambda: next(_uid))
+    users: List["Instruction"] = field(default_factory=list, repr=False)
+
+    def __post_init__(self):
+        if not self.name:
+            tag = self.attrs.get("fn", self.attrs.get("kind", self.opcode))
+            self.name = f"{tag}.{self.id}"
+        for op in self.operands:
+            op.users.append(self)
+
+    # -- convenience ------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def num_elements(self) -> int:
+        return _prod(self.shape)
+
+    @property
+    def bytesize(self) -> int:
+        return self.num_elements * np.dtype(self.dtype).itemsize
+
+    @property
+    def is_elementwise(self) -> bool:
+        return self.opcode in ("elementwise", "select")
+
+    @property
+    def is_expensive(self) -> bool:
+        return (
+            self.opcode == "elementwise"
+            and self.attrs.get("fn") in EXPENSIVE_ELEMENTWISE
+        )
+
+    @property
+    def is_library_call(self) -> bool:
+        """True for dots the user did NOT mark fusable (cuBLAS analogue)."""
+        return self.opcode == "dot" and not self.attrs.get("fusable", False)
+
+    def footprint_bytes(self) -> int:
+        """Memory IO footprint: bytes read + bytes written (paper Fig. 1)."""
+        return self.bytesize + sum(o.bytesize for o in self.operands)
+
+    def __hash__(self):
+        return self.id
+
+    def __repr__(self):
+        ops = ", ".join(o.name for o in self.operands)
+        return f"%{self.name}: {np.dtype(self.dtype).name}{list(self.shape)} = {self.opcode}({ops}) {self.attrs or ''}"
+
+
+# --------------------------------------------------------------------------
+# Module
+# --------------------------------------------------------------------------
+
+
+class Module:
+    """A StitchIR computation graph. Instructions are stored topologically
+    (creation order — operands always precede users)."""
+
+    def __init__(self, name: str = "module"):
+        self.name = name
+        self.instructions: List[Instruction] = []
+        self.parameters: List[Instruction] = []
+
+    def add(self, instr: Instruction) -> Instruction:
+        self.instructions.append(instr)
+        if instr.opcode == "parameter":
+            self.parameters.append(instr)
+        return instr
+
+    @property
+    def roots(self) -> List[Instruction]:
+        """Sink instructions (no users) — the module outputs."""
+        return [i for i in self.instructions if not i.users]
+
+    def verify(self) -> None:
+        seen = set()
+        for instr in self.instructions:
+            for op in instr.operands:
+                if op.id not in seen:
+                    raise ValueError(
+                        f"{instr.name}: operand {op.name} not defined before use"
+                    )
+            seen.add(instr.id)
+            _infer_checked(instr)
+
+    def __repr__(self):
+        lines = [f"module {self.name} {{"]
+        lines += [f"  {i!r}" for i in self.instructions]
+        lines.append("}")
+        return "\n".join(lines)
+
+
+def _infer_checked(instr: Instruction) -> None:
+    """Re-run shape inference and check it matches the recorded shape."""
+    shape = infer_shape(
+        instr.opcode, [o.shape for o in instr.operands], instr.attrs
+    )
+    if shape is not None and tuple(shape) != tuple(instr.shape):
+        raise ValueError(
+            f"{instr.name}: recorded shape {instr.shape} != inferred {shape}"
+        )
+
+
+def infer_shape(opcode, operand_shapes, attrs) -> Optional[Tuple[int, ...]]:
+    if opcode in ("parameter", "constant", "iota"):
+        return None  # shape is intrinsic
+    if opcode == "elementwise":
+        return tuple(operand_shapes[0])
+    if opcode == "select":
+        return tuple(operand_shapes[1])
+    if opcode in ("reshape", "bitcast"):
+        return tuple(attrs["new_shape"])
+    if opcode == "transpose":
+        perm = attrs["perm"]
+        s = operand_shapes[0]
+        return tuple(s[p] for p in perm)
+    if opcode == "broadcast":
+        return tuple(attrs["out_shape"])
+    if opcode == "reduce":
+        dims = set(attrs["dims"])
+        return tuple(d for i, d in enumerate(operand_shapes[0]) if i not in dims)
+    if opcode == "dot":
+        lhs, rhs = operand_shapes
+        assert lhs[:-2] == rhs[:-2], f"batch dims mismatch {lhs} x {rhs}"
+        assert lhs[-1] == rhs[-2], f"contract mismatch {lhs} x {rhs}"
+        return tuple(lhs[:-1]) + (rhs[-1],)
+    if opcode == "concat":
+        dim = attrs["dim"]
+        out = list(operand_shapes[0])
+        out[dim] = sum(s[dim] for s in operand_shapes)
+        return tuple(out)
+    if opcode == "gather":
+        table, idx = operand_shapes
+        return tuple(idx) + tuple(table[1:])
+    raise ValueError(f"unknown opcode {opcode}")
+
+
+# --------------------------------------------------------------------------
+# The single-op jnp interpreter (shared oracle <-> codegen)
+# --------------------------------------------------------------------------
+
+
+def apply_op(instr: Instruction, *vals, shape_override: Optional[Tuple[int, ...]] = None):
+    """Evaluate one instruction given operand *values* (full arrays in the
+    reference executor; VMEM block tiles inside generated Pallas kernels).
+
+    ``shape_override`` lets the codegen evaluate shape-modulating ops on a
+    *block* of the output space rather than the whole output.
+    """
+    op = instr.opcode
+    a = instr.attrs
+    if op == "elementwise":
+        fn = a["fn"]
+        if fn in ELEMENTWISE_UNARY:
+            return ELEMENTWISE_UNARY[fn](vals[0])
+        out = ELEMENTWISE_BINARY[fn](vals[0], vals[1])
+        return out
+    if op == "select":
+        return jnp.where(vals[0], vals[1], vals[2])
+    if op in ("reshape", "bitcast"):
+        return jnp.reshape(vals[0], shape_override or a["new_shape"])
+    if op == "transpose":
+        return jnp.transpose(vals[0], a["perm"])
+    if op == "broadcast":
+        out_shape = shape_override or a["out_shape"]
+        dims = a["dims"]
+        # XLA broadcast_in_dim semantics
+        return jax.lax.broadcast_in_dim(vals[0], out_shape, dims)
+    if op == "reduce":
+        kind = a["kind"]
+        return REDUCE_KINDS[kind](vals[0], axis=tuple(a["dims"]))
+    if op == "dot":
+        lhs, rhs = vals
+        return jax.lax.dot_general(
+            lhs,
+            rhs,
+            dimension_numbers=(
+                ((lhs.ndim - 1,), (rhs.ndim - 2,)),
+                (tuple(range(lhs.ndim - 2)), tuple(range(rhs.ndim - 2))),
+            ),
+            preferred_element_type=jnp.float32
+            if np.dtype(instr.dtype) == np.float32
+            else None,
+        ).astype(instr.dtype)
+    if op == "concat":
+        return jnp.concatenate(vals, axis=a["dim"])
+    if op == "gather":
+        return jnp.take(vals[0], vals[1].astype(jnp.int32), axis=0)
+    if op == "iota":
+        shape = shape_override or instr.shape
+        return jax.lax.broadcasted_iota(instr.dtype, shape, a["dim"])
+    if op == "constant":
+        return jnp.asarray(a["value"], dtype=instr.dtype)
+    raise ValueError(f"cannot apply {op}")
+
+
+# --------------------------------------------------------------------------
+# GraphBuilder + Tensor tracing frontend
+# --------------------------------------------------------------------------
+
+
+class Tensor:
+    """A traced handle; supports jnp-style operator overloading."""
+
+    __slots__ = ("builder", "instr")
+    __array_priority__ = 100  # beat numpy broadcasting
+
+    def __init__(self, builder: "GraphBuilder", instr: Instruction):
+        self.builder = builder
+        self.instr = instr
+
+    @property
+    def shape(self):
+        return self.instr.shape
+
+    @property
+    def dtype(self):
+        return self.instr.dtype
+
+    @property
+    def ndim(self):
+        return len(self.instr.shape)
+
+    def _b(self, other, fn, reverse=False):
+        other = self.builder.lift(other, like=self)
+        lhs, rhs = (other, self) if reverse else (self, other)
+        return self.builder.binary(fn, lhs, rhs)
+
+    def __add__(self, o): return self._b(o, "add")
+    def __radd__(self, o): return self._b(o, "add", True)
+    def __sub__(self, o): return self._b(o, "sub")
+    def __rsub__(self, o): return self._b(o, "sub", True)
+    def __mul__(self, o): return self._b(o, "mul")
+    def __rmul__(self, o): return self._b(o, "mul", True)
+    def __truediv__(self, o): return self._b(o, "div")
+    def __rtruediv__(self, o): return self._b(o, "div", True)
+    def __pow__(self, o): return self._b(o, "pow")
+    def __neg__(self): return self.builder.unary("neg", self)
+    def __lt__(self, o): return self._b(o, "lt")
+    def __le__(self, o): return self._b(o, "le")
+    def __gt__(self, o): return self._b(o, "gt")
+    def __ge__(self, o): return self._b(o, "ge")
+
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return self.builder.reshape(self, shape)
+
+    def transpose(self, perm):
+        return self.builder.transpose(self, perm)
+
+    def sum(self, dims, keepdims=False):
+        return self.builder.reduce(self, dims, "sum", keepdims=keepdims)
+
+    def max(self, dims, keepdims=False):
+        return self.builder.reduce(self, dims, "max", keepdims=keepdims)
+
+    def __repr__(self):
+        return f"Tensor({self.instr.name}: {np.dtype(self.dtype).name}{list(self.shape)})"
+
+
+class GraphBuilder:
+    def __init__(self, name: str = "module"):
+        self.module = Module(name)
+
+    # -- creation ---------------------------------------------------------
+    def _emit(self, opcode, shape, dtype, operands=(), attrs=None, name="") -> Tensor:
+        instr = Instruction(
+            opcode,
+            tuple(int(s) for s in shape),
+            np.dtype(dtype),
+            [t.instr for t in operands],
+            dict(attrs or {}),
+            name=name,
+        )
+        self.module.add(instr)
+        return Tensor(self, instr)
+
+    def parameter(self, name, shape, dtype=jnp.float32) -> Tensor:
+        return self._emit("parameter", shape, dtype, name=name)
+
+    def constant(self, value, dtype=None) -> Tensor:
+        arr = np.asarray(value, dtype=dtype)
+        return self._emit("constant", arr.shape, arr.dtype, attrs={"value": arr})
+
+    def lift(self, value, like: Tensor) -> Tensor:
+        """Lift a python scalar / ndarray to a Tensor broadcast to ``like``."""
+        if isinstance(value, Tensor):
+            if value.shape == like.shape:
+                return value
+            if value.ndim == 0:
+                return self.broadcast(value, like.shape, dims=())
+            raise ValueError(f"shape mismatch {value.shape} vs {like.shape}")
+        arr = np.asarray(value, dtype=like.dtype)
+        c = self.constant(arr)
+        if arr.shape == tuple(like.shape):
+            return c
+        if arr.ndim == 0:
+            return self.broadcast(c, like.shape, dims=())
+        raise ValueError(f"cannot lift shape {arr.shape} to {like.shape}")
+
+    # -- op builders --------------------------------------------------------
+    def unary(self, fn, x: Tensor) -> Tensor:
+        dtype = jnp.bool_ if fn in _COMPARE_FNS else x.dtype
+        return self._emit("elementwise", x.shape, dtype, [x], {"fn": fn})
+
+    def binary(self, fn, x: Tensor, y: Tensor) -> Tensor:
+        assert tuple(x.shape) == tuple(y.shape), f"{fn}: {x.shape} vs {y.shape}"
+        dtype = jnp.bool_ if fn in _COMPARE_FNS else x.dtype
+        return self._emit("elementwise", x.shape, dtype, [x, y], {"fn": fn})
+
+    def select(self, pred: Tensor, t: Tensor, f: Tensor) -> Tensor:
+        return self._emit("select", t.shape, t.dtype, [pred, t, f])
+
+    def reshape(self, x: Tensor, new_shape) -> Tensor:
+        new_shape = tuple(int(s) for s in new_shape)
+        assert _prod(new_shape) == x.instr.num_elements
+        return self._emit("reshape", new_shape, x.dtype, [x], {"new_shape": new_shape})
+
+    def bitcast(self, x: Tensor, new_shape) -> Tensor:
+        new_shape = tuple(int(s) for s in new_shape)
+        assert _prod(new_shape) == x.instr.num_elements
+        return self._emit("bitcast", new_shape, x.dtype, [x], {"new_shape": new_shape})
+
+    def transpose(self, x: Tensor, perm) -> Tensor:
+        perm = tuple(perm)
+        shape = tuple(x.shape[p] for p in perm)
+        return self._emit("transpose", shape, x.dtype, [x], {"perm": perm})
+
+    def broadcast(self, x: Tensor, out_shape, dims) -> Tensor:
+        out_shape, dims = tuple(out_shape), tuple(dims)
+        for i, d in enumerate(dims):
+            assert x.shape[i] in (1, out_shape[d])
+        return self._emit(
+            "broadcast", out_shape, x.dtype, [x], {"out_shape": out_shape, "dims": dims}
+        )
+
+    def broadcast_like(self, x: Tensor, like: Tensor, dims) -> Tensor:
+        return self.broadcast(x, like.shape, dims)
+
+    def reduce(self, x: Tensor, dims, kind="sum", keepdims=False) -> Tensor:
+        if isinstance(dims, int):
+            dims = (dims,)
+        dims = tuple(sorted(d % x.ndim for d in dims))
+        out_shape = tuple(s for i, s in enumerate(x.shape) if i not in dims)
+        r = self._emit("reduce", out_shape, x.dtype, [x], {"dims": dims, "kind": kind})
+        if keepdims:
+            kept = [i for i in range(x.ndim) if i not in dims]
+            r = self.broadcast(r, tuple(s if i not in dims else 1 for i, s in enumerate(x.shape)), tuple(kept))
+        return r
+
+    def dot(self, lhs: Tensor, rhs: Tensor, fusable=False) -> Tensor:
+        shape = infer_shape("dot", [lhs.shape, rhs.shape], {})
+        return self._emit("dot", shape, lhs.dtype, [lhs, rhs], {"fusable": fusable})
+
+    def concat(self, xs: Sequence[Tensor], dim: int) -> Tensor:
+        shape = infer_shape("concat", [x.shape for x in xs], {"dim": dim})
+        return self._emit("concat", shape, xs[0].dtype, list(xs), {"dim": dim})
+
+    def gather(self, table: Tensor, idx: Tensor) -> Tensor:
+        shape = tuple(idx.shape) + tuple(table.shape[1:])
+        return self._emit("gather", shape, table.dtype, [table, idx])
+
+    def iota(self, shape, dim=0, dtype=jnp.float32) -> Tensor:
+        return self._emit("iota", shape, dtype, [], {"dim": dim})
+
+    # -- named math sugar ---------------------------------------------------
+    def exp(self, x): return self.unary("exp", x)
+    def log(self, x): return self.unary("log", x)
+    def tanh(self, x): return self.unary("tanh", x)
+    def sqrt(self, x): return self.unary("sqrt", x)
+    def rsqrt(self, x): return self.unary("rsqrt", x)
+    def sigmoid(self, x): return self.unary("sigmoid", x)
+    def silu(self, x): return self.unary("silu", x)
+    def gelu(self, x): return self.unary("gelu", x)
+    def square(self, x): return self.unary("square", x)
+    def neg(self, x): return self.unary("neg", x)
+    def abs(self, x): return self.unary("abs", x)
+    def maximum(self, x, y): return self.binary("max", x, self.lift(y, like=x))
+    def minimum(self, x, y): return self.binary("min", x, self.lift(y, like=x))
+
+    def softmax(self, x: Tensor, dim: int = -1) -> Tensor:
+        """The paper's Figure-3 pattern: max-sub, exp, reduce, divide."""
+        dim = dim % x.ndim
+        kept = tuple(i for i in range(x.ndim) if i != dim)
+        z = x - self.broadcast(self.reduce(x, (dim,), "max"), x.shape, kept)
+        e = self.exp(z)
+        s = self.reduce(e, (dim,), "sum")
+        return e / self.broadcast(s, x.shape, kept)
+
+
+def trace(fn: Callable, *specs, name: str = "traced") -> Module:
+    """Trace a python function of Tensors into a Module.
+
+    ``specs`` are (name, shape, dtype) triples or jax.ShapeDtypeStruct.
+    """
+    b = GraphBuilder(name)
+    args = []
+    for i, spec in enumerate(specs):
+        if isinstance(spec, jax.ShapeDtypeStruct):
+            args.append(b.parameter(f"p{i}", spec.shape, spec.dtype))
+        else:
+            pname, shape, dtype = spec
+            args.append(b.parameter(pname, shape, dtype))
+    out = fn(b, *args)
+    b.module.verify()
+    return b.module

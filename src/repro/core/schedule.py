@@ -1,0 +1,388 @@
+"""Schedule specification + constraint propagation — paper §4.1/§4.2.
+
+A schedule for one instruction is ``(split_dim, sword, sched_type)`` defined
+on its *output* shape: the work space is split into ``blocks`` chunks, one
+per grid program (the CTA analogue on TPU).
+
+  Row    : blocks = prod(shape[:split]) * sword.  A block owns a
+           ``1/sword`` slice of the split dim and the **full minor dims**
+           (everything right of the split).  Row chunks are contiguous in
+           row-major order — the layout-friendly direction on TPU.
+  Column : blocks = sword * prod(shape[split+1:]).  A block owns the full
+           **major dims** and fixed minor coordinates.
+
+Propagation maps a schedule on an instruction's output to schedules on its
+operands by the op-specific rules of Table 1.  Two extensions the codegen
+needs that the paper leaves implicit:
+
+  * ``Replicated`` — the degenerate schedule where every block sees/computes
+    the full tensor (broadcast operands, tiny reduce results).  Bounded by
+    ``replicate_limit`` so a fused kernel can never demand an unbounded
+    VMEM-resident operand.
+  * alignment — all *chunked* instructions in a fusion must agree on the
+    launch ``blocks``; propagation fails (or falls back to Replicated) when
+    an op's own blocks formula cannot match the launch grid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .ir import Instruction
+
+ROW = "Row"
+COLUMN = "Column"
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclass(frozen=True)
+class Sched:
+    """Schedule of one instruction's output space."""
+
+    kind: str = "chunked"       # "chunked" | "replicated"
+    split_dim: int = 0
+    sword: int = 1
+    sched_type: str = ROW
+
+    @staticmethod
+    def replicated() -> "Sched":
+        return Sched(kind="replicated")
+
+    def __repr__(self):
+        if self.kind == "replicated":
+            return "Sched(repl)"
+        return f"Sched({self.sched_type}, split={self.split_dim}, sword={self.sword})"
+
+
+REPLICATED = Sched.replicated()
+
+
+def blocks_of(shape: Tuple[int, ...], sched: Sched) -> int:
+    if sched.kind == "replicated":
+        return 1
+    s, w = sched.split_dim, sched.sword
+    if sched.sched_type == ROW:
+        return _prod(shape[:s]) * w
+    return w * _prod(shape[s + 1:])
+
+
+def chunk_shape(shape: Tuple[int, ...], sched: Sched) -> Tuple[int, ...]:
+    if sched.kind == "replicated":
+        return tuple(shape)
+    s, w = sched.split_dim, sched.sword
+    n = len(shape)
+    if sched.sched_type == ROW:
+        return (1,) * s + (shape[s] // w,) + tuple(shape[s + 1:])
+    return tuple(shape[:s]) + (shape[s] // w,) + (1,) * (n - s - 1)
+
+
+def block_index(shape: Tuple[int, ...], sched: Sched, b):
+    """Block-unit multi-index for grid step ``b`` (Pallas index_map body).
+
+    Works with python ints and traced values alike (uses //, %).
+    """
+    n = len(shape)
+    if sched.kind == "replicated":
+        return (0,) * n
+    s, w = sched.split_dim, sched.sword
+    idx = [0] * n
+    if sched.sched_type == ROW:
+        sub = b % w
+        major = b // w
+        idx[s] = sub
+        for d in range(s - 1, -1, -1):
+            idx[d] = major % shape[d]
+            major = major // shape[d]
+    else:
+        minorprod = _prod(shape[s + 1:])
+        sub = b // minorprod
+        minor = b % minorprod
+        idx[s] = sub
+        for d in range(n - 1, s, -1):
+            idx[d] = minor % shape[d]
+            minor = minor // shape[d]
+    return tuple(idx)
+
+
+def _divisors(n: int, cap: int = 24) -> List[int]:
+    ds = [d for d in range(1, int(n ** 0.5) + 1) if n % d == 0]
+    ds = sorted(set(ds + [n // d for d in ds]))
+    if len(ds) > cap:
+        # keep a spread: ends + powers-of-two-ish interior
+        keep = {ds[0], ds[-1]}
+        for d in ds:
+            if d & (d - 1) == 0:  # power of two divisor
+                keep.add(d)
+        ds = sorted(keep)[:cap]
+    return ds
+
+
+def candidate_schedules(shape: Tuple[int, ...], max_blocks: int = 1 << 16) -> List[Sched]:
+    """The (small) schedule space of one output shape — paper §4.1."""
+    if not shape:
+        return [Sched(split_dim=0, sword=1, sched_type=ROW)] if False else [REPLICATED]
+    out, seen = [], set()
+    for s in range(len(shape)):
+        for w in _divisors(shape[s]):
+            for t in (ROW, COLUMN):
+                sched = Sched("chunked", s, w, t)
+                b = blocks_of(shape, sched)
+                if b > max_blocks:
+                    continue
+                key = (b, chunk_shape(shape, sched))
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(sched)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Table-1 propagation rules
+# --------------------------------------------------------------------------
+
+
+class Unsatisfiable(Exception):
+    pass
+
+
+def _map_reduce_out_to_in(split_out: int, reduce_dims: Tuple[int, ...]) -> int:
+    """Map an output dim index of a reduce to the input dim index."""
+    rd = set(reduce_dims)
+    kept = [i for i in range(max(rd) + split_out + 2) if i not in rd]
+    return kept[split_out]
+
+
+def propagate(instr: Instruction, sched: Sched) -> List[Sched]:
+    """Given ``sched`` on ``instr``'s output, derive operand schedules.
+
+    Returns one Sched per operand.  Raises Unsatisfiable when Table 1 has no
+    rule that passes.
+    """
+    if sched.kind == "replicated":
+        return [REPLICATED] * len(instr.operands)
+
+    op = instr.opcode
+    a = instr.attrs
+    s, w, t = sched.split_dim, sched.sword, sched.sched_type
+
+    if op in ("elementwise", "select"):
+        # Pass Row, Column (Table 1) — scalar/mismatched operands replicate.
+        out = []
+        for o in instr.operands:
+            out.append(sched if tuple(o.shape) == tuple(instr.shape) else REPLICATED)
+        return out
+
+    if op == "transpose":
+        perm = a["perm"]
+        moved = [i for i in range(len(perm)) if perm[i] != i]
+        if not moved:
+            return [sched]
+        if t == ROW and s < min(moved):
+            return [sched]       # transpose happens fully inside the block
+        if t == COLUMN and s > max(moved):
+            return [sched]
+        raise Unsatisfiable(f"transpose {perm} split={s} {t}")
+
+    if op == "reduce":
+        rdims = tuple(a["dims"])
+        s_in = _map_reduce_out_to_in(s, rdims)
+        in_shape = instr.operands[0].shape
+        if t == ROW and s_in < min(rdims):
+            return [Sched("chunked", s_in, w, ROW)]
+        if t == COLUMN and s_in > max(rdims):
+            return [Sched("chunked", s_in, w, COLUMN)]
+        raise Unsatisfiable(f"reduce dims={rdims} split_out={s} {t}")
+
+    if op == "dot":
+        n = instr.ndim
+        if t == ROW and s < n - 2:
+            lhs, rhs = instr.operands
+            return [Sched("chunked", s, w, ROW), Sched("chunked", s, w, ROW)]
+        raise Unsatisfiable(f"dot split={s} {t}")
+
+    if op in ("reshape", "bitcast"):
+        in_shape = tuple(instr.operands[0].shape)
+        out_shape = tuple(instr.shape)
+        if t == ROW:
+            # Row chunks are contiguous row-major runs; reshape preserves
+            # linearization.  Find (s', w') with the same run length.
+            run = _prod(out_shape[s + 1:]) * (out_shape[s] // w)
+            for s2 in range(len(in_shape)):
+                suffix = _prod(in_shape[s2 + 1:])
+                if run % suffix == 0:
+                    c = run // suffix
+                    if c >= 1 and in_shape[s2] % c == 0 and c <= in_shape[s2]:
+                        return [Sched("chunked", s2, in_shape[s2] // c, ROW)]
+            raise Unsatisfiable(f"reshape {in_shape}->{out_shape} run={run}")
+        # Column: only safe when the reshape leaves the split dim and all
+        # minor dims untouched.
+        tail = out_shape[s:]
+        for s2 in range(len(in_shape)):
+            if tuple(in_shape[s2:]) == tail:
+                return [Sched("chunked", s2, w, COLUMN)]
+        raise Unsatisfiable(f"reshape-col {in_shape}->{out_shape}")
+
+    if op == "broadcast":
+        dims = tuple(a["dims"])
+        opnd = instr.operands[0]
+        if s in dims:
+            i = dims.index(s)
+            if opnd.shape[i] == instr.shape[s]:
+                # minor/major coverage: operand dims map monotonically
+                return [Sched("chunked", i, w, t)]
+        return [REPLICATED]
+
+    if op == "concat":
+        d = a["dim"]
+        if (t == ROW and s < d) or (t == COLUMN and s > d):
+            return [sched] * len(instr.operands)
+        raise Unsatisfiable(f"concat dim={d} split={s} {t}")
+
+    if op == "gather":
+        idx = instr.operands[1]
+        if t == ROW and s < idx.ndim:
+            return [REPLICATED, Sched("chunked", s, w, ROW)]
+        raise Unsatisfiable(f"gather split={s} {t}")
+
+    if op in ("iota", "constant", "parameter"):
+        return []
+
+    raise Unsatisfiable(f"no propagation rule for {op}")
+
+
+# --------------------------------------------------------------------------
+# Whole-fusion schedule resolution (root -> leaves)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ScheduleSolution:
+    """A satisfiable schedule assignment for a fused computation."""
+
+    blocks: int
+    assignment: Dict[int, Sched]          # instr id -> Sched (members + inputs)
+    root_scheds: Dict[int, Sched]
+
+    def sched(self, instr: Instruction) -> Sched:
+        return self.assignment[instr.id]
+
+
+def resolve_schedules(
+    members: List[Instruction],
+    roots: List[Instruction],
+    root_scheds: Dict[int, Sched],
+    replicate_limit: int = 512 * 1024,
+) -> ScheduleSolution:
+    """Back-propagate root schedules through the fusion (paper §4.2).
+
+    ``members`` must be topologically ordered.  All chunked instructions are
+    checked to agree on the launch ``blocks``.  Conflicting requirements fall
+    back to Replicated when the tensor fits ``replicate_limit``.
+    """
+    member_ids = {m.id for m in members}
+    launch_blocks = None
+    for r in roots:
+        b = blocks_of(r.shape, root_scheds[r.id])
+        if launch_blocks is None:
+            launch_blocks = b
+        elif launch_blocks != b:
+            raise Unsatisfiable(
+                f"root blocks disagree: {launch_blocks} vs {b} ({r.name})"
+            )
+    assignment: Dict[int, Sched] = {}
+
+    def assign(instr: Instruction, sched: Sched) -> bool:
+        """Record ``sched`` for ``instr``; True if the assignment changed.
+
+        Assignments are monotone: an instruction may only move from
+        unassigned -> chunked -> replicated, so a fixpoint exists.
+        """
+        if sched.kind == "chunked" and blocks_of(instr.shape, sched) != launch_blocks:
+            sched = REPLICATED  # cannot align with the launch grid
+        prev = assignment.get(instr.id)
+        if prev is not None and prev != sched:
+            sched = REPLICATED  # conflicting requirements -> whole tensor
+        if sched.kind == "replicated" and instr.bytesize > replicate_limit:
+            raise Unsatisfiable(
+                f"{instr.name}: replicated {instr.bytesize}B > limit"
+            )
+        if prev == sched:
+            return False
+        assignment[instr.id] = sched
+        return True
+
+    for r in roots:
+        assign(r, root_scheds[r.id])
+
+    # Reverse-topo sweeps to fixpoint (downgrades to Replicated can cascade;
+    # monotonicity bounds the iteration count).
+    for _ in range(len(members) + 1):
+        changed = False
+        for instr in reversed(members):
+            if instr.id not in assignment:
+                # member never reached from a root yet — replicate
+                changed |= assign(instr, REPLICATED)
+            sched = assignment[instr.id]
+            for o, osched in zip(instr.operands, propagate(instr, sched)):
+                changed |= assign(o, osched)
+        if not changed:
+            break
+
+    # Final soundness check: every member's operands must be readable under
+    # the member's schedule (equal or replicated).
+    for instr in members:
+        sched = assignment[instr.id]
+        for o, osched in zip(instr.operands, propagate(instr, sched)):
+            got = assignment[o.id]
+            if got != osched and got.kind != "replicated":
+                raise Unsatisfiable(
+                    f"{instr.name}: operand {o.name} has {got}, needs {osched}"
+                )
+
+    return ScheduleSolution(launch_blocks, assignment, dict(root_scheds))
+
+
+def any_satisfiable(
+    members: List[Instruction],
+    roots: List[Instruction],
+    candidates: Optional[List[Sched]] = None,
+    replicate_limit: int = 512 * 1024,
+    max_blocks: int = 1 << 16,
+) -> Optional[ScheduleSolution]:
+    """Cheap existence check used by SchdConsistent during fusion."""
+    cands = candidates or candidate_schedules(roots[0].shape, max_blocks)
+    for sched in cands:
+        try:
+            b = blocks_of(roots[0].shape, sched)
+            rs = {}
+            ok = True
+            for r in roots:
+                if tuple(r.shape) == tuple(roots[0].shape):
+                    rs[r.id] = sched
+                else:
+                    # find a sched for r with the same blocks
+                    alt = [
+                        c
+                        for c in candidate_schedules(r.shape, max_blocks)
+                        if blocks_of(r.shape, c) == b
+                    ]
+                    if not alt:
+                        ok = False
+                        break
+                    rs[r.id] = alt[0]
+            if not ok:
+                continue
+            return resolve_schedules(members, roots, rs, replicate_limit)
+        except Unsatisfiable:
+            continue
+    return None

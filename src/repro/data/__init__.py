@@ -1,0 +1,1 @@
+from .pipeline import PrefetchIterator, SyntheticLM, make_data_iterator

@@ -1,0 +1,10 @@
+from .collectives import bucketed_psum, cross_pod_mean, psum_tree
+from .elastic import choose_mesh_shape, make_elastic_mesh, reshard_state
+from .sharding import (
+    batch_shardings,
+    batch_spec,
+    cache_shardings,
+    opt_state_shardings,
+    param_spec,
+    params_shardings,
+)

@@ -1,0 +1,76 @@
+"""Collective helpers: bucketed gradient all-reduce with optional
+compression, expressed with shard_map + psum (the manual-collective path
+used when overlapping cross-pod reduction with compute).
+
+Under plain pjit, XLA inserts gradient all-reduces automatically; these
+helpers exist for (a) the compression wire format (bf16/int8 payloads) and
+(b) explicit bucketing so DCN transfers pipeline instead of one monolithic
+fused all-reduce at the end of the backward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bucket_leaves(tree, bucket_bytes: int = 16 * 1024 * 1024) -> List[List[int]]:
+    """Group leaf indices into ~bucket_bytes buckets (reduce-scatter units)."""
+    leaves = jax.tree.leaves(tree)
+    buckets: List[List[int]] = [[]]
+    size = 0
+    for i, l in enumerate(leaves):
+        b = int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        if size + b > bucket_bytes and buckets[-1]:
+            buckets.append([])
+            size = 0
+        buckets[-1].append(i)
+        size += b
+    return buckets
+
+
+def psum_tree(tree, axis_name: str):
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def bucketed_psum(tree, axis_name: str, bucket_bytes: int = 16 * 1024 * 1024,
+                  compress: str = "none"):
+    """psum leaf-buckets sequentially; ``compress`` in {none, bf16}.
+
+    Inside shard_map each bucket becomes its own all-reduce op, so XLA's
+    scheduler can start early buckets while later grads are still being
+    produced (the overlap trick); bf16 halves the wire payload.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    buckets = bucket_leaves(tree, bucket_bytes)
+    out: List[Any] = [None] * len(leaves)
+    for idx in buckets:
+        for i in idx:
+            x = leaves[i]
+            if compress == "bf16":
+                r = jax.lax.psum(x.astype(jnp.bfloat16), axis_name)
+                out[i] = r.astype(x.dtype)
+            else:
+                out[i] = jax.lax.psum(x, axis_name)
+    return jax.tree.unflatten(treedef, out)
+
+
+def cross_pod_mean(tree, mesh: Mesh, compress: str = "bf16"):
+    """All-reduce-mean a replicated-per-pod gradient pytree across the pod
+    axis via shard_map (the explicit cross-DCN reduction)."""
+    if "pod" not in mesh.axis_names:
+        return tree
+
+    def f(t):
+        summed = bucketed_psum(t, "pod", compress=compress)
+        n = mesh.shape["pod"]
+        return jax.tree.map(lambda x: x / n, summed)
+
+    specs = jax.tree.map(lambda _: P(), tree)
+    return jax.shard_map(
+        f, mesh=mesh, in_specs=(specs,), out_specs=specs, check_vma=False
+    )(tree)

@@ -1,0 +1,56 @@
+"""Elastic scaling: rebuild the mesh from the surviving device count and
+re-shard state.
+
+Full-replica checkpoints (checkpoint/manager.py) make re-sharding trivial:
+state is loaded as host arrays and ``jax.device_put`` against the NEW mesh's
+shardings.  ``choose_mesh_shape`` picks the largest (data, model) grid the
+surviving devices support while preserving the model-parallel degree when
+possible (TP degree is a property of the weights' divisibility, DP degree is
+free to shrink/grow).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .sharding import params_shardings
+
+
+def choose_mesh_shape(
+    num_devices: int, prefer_model: int = 16
+) -> Tuple[int, int]:
+    """(data, model) for the surviving device count."""
+    model = min(prefer_model, num_devices)
+    while num_devices % model:
+        model -= 1
+    return num_devices // model, model
+
+
+def make_elastic_mesh(devices=None, prefer_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = choose_mesh_shape(len(devices), prefer_model)
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(params, opt_state, new_mesh: Mesh):
+    """Re-place (host or differently-sharded) state onto a new mesh."""
+    import jax.numpy as jnp
+
+    from ..train.optimizer import AdamWState
+    from .sharding import opt_state_shardings
+
+    pshard = params_shardings(params, new_mesh)
+    new_params = jax.tree.map(jax.device_put, params, pshard)
+    if opt_state is None:
+        return new_params, None
+    oshard = opt_state_shardings(opt_state, pshard, new_mesh)
+    new_opt = AdamWState(
+        step=jax.device_put(opt_state.step, oshard.step),
+        m=jax.tree.map(jax.device_put, opt_state.m, oshard.m),
+        v=jax.tree.map(jax.device_put, opt_state.v, oshard.v),
+    )
+    return new_params, new_opt

@@ -1,0 +1,8 @@
+"""Stitched Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+Each kernel is a productionized output of the FusionStitching machinery:
+<name>.py holds the pallas_call + BlockSpecs, ops.py the jit'd public
+wrappers, ref.py the pure-jnp oracles the tests sweep against.
+"""
+from . import ops, ref
+from .ops import attention, attention_decode, moe_gate, rmsnorm, softmax

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the stitched Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU validation per the brief) and
+False on TPU, where the kernels compile to real Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .ref import (
+    attention_ref,
+    decode_attention_ref,
+    moe_gate_ref,
+    rmsnorm_ref,
+    softmax_ref,
+)
+from .stitched_attention import decode_attention, flash_attention
+from .stitched_moe_gate import stitched_moe_gate
+from .stitched_rmsnorm import stitched_rmsnorm
+from .stitched_softmax import stitched_softmax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+def softmax(x, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return stitched_softmax(x, **kw)
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return stitched_rmsnorm(x, gamma, eps=eps, **kw)
+
+
+def attention(q, k, v, causal: bool = True, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return flash_attention(q, k, v, causal=causal, **kw)
+
+
+def attention_decode(q, k, v, lengths, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return decode_attention(q, k, v, lengths, **kw)
+
+
+def moe_gate(logits, top_k: int, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return stitched_moe_gate(logits, top_k, **kw)
+
+
+__all__ = [
+    "softmax", "rmsnorm", "attention", "attention_decode", "moe_gate",
+    "softmax_ref", "rmsnorm_ref", "attention_ref", "decode_attention_ref",
+    "moe_gate_ref", "flash_attention", "decode_attention",
+    "stitched_softmax", "stitched_rmsnorm", "stitched_moe_gate",
+    "on_tpu", "default_interpret",
+]

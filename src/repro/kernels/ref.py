@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every stitched Pallas kernel.
+
+Each kernel in this package is validated against these references over a
+sweep of shapes/dtypes (tests/test_kernels_*.py), in interpret mode on CPU
+and compiled on real TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable softmax (the paper's Fig.-3 exp/reduce/div chain)."""
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=axis, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Hq, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,            # (B, Hq, D)
+    k: jax.Array,            # (B, Hkv, S, D)  KV cache
+    v: jax.Array,            # (B, Hkv, S, D)
+    lengths: jax.Array,      # (B,) int32 valid cache lengths
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gate_ref(
+    logits: jax.Array,       # (T, E)
+    top_k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Router: softmax over experts, take top-k, renormalize the k weights.
+
+    Returns (weights (T, k) f32, indices (T, k) i32), indices sorted by
+    descending weight.
+    """
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(p, top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx.astype(jnp.int32)

@@ -1,0 +1,210 @@
+"""Stitched attention — the paper's softmax×BatchDot pattern (Fig. 3) taken
+to its TPU-native conclusion.
+
+The motivating example stitches exp/reduce/divide with a BatchMatMul through
+shared memory.  On TPU we adapt the insight rather than port the CUDA
+schedule: the KV sequence is streamed block-by-block through VMEM while the
+softmax intermediaries (running max m, running sum l, f32 accumulator) are
+*resident in VMEM scratch across grid steps* — an online-softmax
+(flash-style) schedule.  This is block composition where the scratch hand-off
+additionally carries state across blocks, which is what the sequential TPU
+grid (unlike independent CUDA CTAs) makes possible.
+
+Two kernels:
+  * ``flash_attention``  — prefill/training: grid (B, Hq, nq, nkv), causal.
+  * ``decode_attention`` — one new token vs a KV cache with per-batch valid
+    lengths: grid (B, Hq, nkv).
+
+GQA is handled in the K/V index maps (kv head = q head // group); MQA is the
+kv=1 special case.  All arithmetic is f32 in-kernel regardless of I/O dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- prefill
+def _flash_kernel(scale, causal, bq, bk, nkv, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = True
+    if causal:
+        # skip fully-masked KV blocks (strictly above the diagonal)
+        run = ik * bk <= iq * bq + bq - 1
+
+    @pl.when(run if causal else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,               # (B, Hq, S, D)
+    k: jax.Array,               # (B, Hkv, S, D)
+    v: jax.Array,               # (B, Hkv, S, D)
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nkv = S // bq, S // bk
+
+    grid = (B, Hq, nq, nkv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale, causal, bq, bk, nkv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, D), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+# ----------------------------------------------------------------- decode
+def _decode_kernel(scale, bk, nkv, q_ref, k_ref, v_ref, len_ref, o_ref,
+                   acc_ref, m_ref, l_ref):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+
+    @pl.when(ik * bk < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, d)
+        kb = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        vb = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (1, bk)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,               # (B, Hq, D) — one new token per sequence
+    k: jax.Array,               # (B, Hkv, S, D) KV cache
+    v: jax.Array,               # (B, Hkv, S, D)
+    lengths: jax.Array,         # (B,) int32 valid lengths
+    scale: float | None = None,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nkv = S // bk
+    q4 = q.reshape(B, Hq, 1, D)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale, bk, nkv),
+        grid=(B, Hq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            _vmem((1, D), jnp.float32),
+            _vmem((1, 1), jnp.float32),
+            _vmem((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k, v, lengths.astype(jnp.int32))
+    return out.reshape(B, Hq, D)
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except ImportError:  # pragma: no cover
+        return pl.MemorySpace.ANY  # type: ignore

@@ -1,0 +1,67 @@
+"""Stitched MoE router gate — softmax + top-k + renormalize in ONE kernel.
+
+The router chain (softmax over experts, k iterated arg-maxes, renormalize)
+is exactly the fine-granularity multi-op pattern FusionStitching targets:
+XLA's baseline splits it at every reduce.  One Row-schedule grid over token
+blocks; the expert dim (small) lives entirely in-block; the top-k loop is
+unrolled (k is static and <= 8 for every assigned architecture).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(top_k, w_ref_dtype, x_ref, w_ref, i_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (bt, E)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)             # softmax
+    total = jnp.zeros((p.shape[0], 1), jnp.float32)
+    picks_w, picks_i = [], []
+    cur = p
+    for _ in range(top_k):                                 # unrolled top-k
+        wi = jnp.max(cur, axis=-1)
+        ii = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        picks_w.append(wi)
+        picks_i.append(ii)
+        total = total + wi[:, None]
+        onehot = jax.nn.one_hot(ii, cur.shape[-1], dtype=jnp.float32)
+        cur = cur - onehot * 2.0                           # mask out the pick
+    w = jnp.stack(picks_w, axis=-1) / total                # renormalize
+    i = jnp.stack(picks_i, axis=-1)
+    w_ref[...] = w.astype(w_ref.dtype)
+    i_ref[...] = i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_k", "block_tokens", "interpret")
+)
+def stitched_moe_gate(
+    logits: jax.Array,          # (T, E)
+    top_k: int,
+    block_tokens: int = 256,
+    interpret: bool = True,
+):
+    T, E = logits.shape
+    bt = min(block_tokens, T)
+    while T % bt:
+        bt -= 1
+    w, i = pl.pallas_call(
+        functools.partial(_gate_kernel, top_k, jnp.float32),
+        grid=(T // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+            pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return w, i

@@ -1,0 +1,54 @@
+"""Stitched RMSNorm — square/mean-reduce/rsqrt/mul/mul in one Pallas kernel.
+
+A column-reduce-free Row schedule: rows are split across grid programs, the
+mean-square reduce runs entirely inside the block (the paper's constraint
+that all reduce dims live in one thread block), and the normalized product
+with the gain is emitted in the same kernel — a pattern XLA's baseline splits
+at the reduce boundary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stitched_softmax import choose_block_rows
+
+
+def _rmsnorm_kernel(eps, x_ref, g_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)   # Reduce
+    inv = jax.lax.rsqrt(ms + eps)                          # expensive ew
+    o_ref[...] = (x * inv * g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def stitched_rmsnorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    eps: float = 1e-6,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    assert gamma.shape == (d,)
+    rows = x.size // d
+    x2 = x.reshape(rows, d)
+    br = block_rows or choose_block_rows(rows, d, x.dtype.itemsize)
+    assert rows % br == 0
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),      # gain replicated
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, gamma)
+    return out.reshape(orig_shape)

@@ -1,0 +1,61 @@
+"""Stitched softmax — the paper's Figure-3 chain as ONE Pallas kernel.
+
+XLA's baseline emits the max-reduce / exp / sum-reduce / divide chain as up
+to four kernels (expensive-op duplication rules, §1).  Block composition
+stitches them: each grid program owns a Row-schedule chunk of rows
+(split_dim = 0 over the flattened row space — the schedule the core tuner
+picks for this pattern) and the reduce intermediaries live in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)        # Reduce.1 (rows in VREGs)
+    e = jnp.exp(x - m)                            # Exponential.1
+    s = jnp.sum(e, axis=-1, keepdims=True)        # Reduce.2
+    o_ref[...] = (e / s).astype(o_ref.dtype)      # Divide.1
+
+
+def choose_block_rows(rows: int, cols: int, itemsize: int,
+                      vmem_budget: int = 4 * 1024 * 1024) -> int:
+    """Row-schedule sword selection: as many rows per block as fit the VMEM
+    budget (x tile + f32 intermediates), rounded to the (8,) sublane."""
+    per_row = cols * (itemsize + 4)
+    br = max(1, vmem_budget // max(per_row, 1))
+    br = min(br, rows)
+    if br >= 8:
+        br = (br // 8) * 8
+    while rows % br:
+        br -= 1
+    return max(br, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stitched_softmax(
+    x: jax.Array,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Softmax over the last dim; leading dims are flattened into rows."""
+    orig_shape = x.shape
+    cols = orig_shape[-1]
+    rows = x.size // cols
+    x2 = x.reshape(rows, cols)
+    br = block_rows or choose_block_rows(rows, cols, x.dtype.itemsize)
+    assert rows % br == 0, f"rows {rows} % block_rows {br} != 0"
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(orig_shape)

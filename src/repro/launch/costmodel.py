@@ -1,0 +1,204 @@
+"""Exact static cost analysis by walking the jaxpr.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so for
+scan-over-layers programs it understates FLOPs by ~L×.  The jaxpr still
+carries every scan's static ``length``, so walking it gives exact logical
+FLOPs (scan-aware, remat-aware — recomputation appears in the differentiated
+jaxpr) and a fusion-approximate HBM byte count.
+
+Conventions (documented in EXPERIMENTS.md):
+  * dot_general: 2·prod(out)·prod(contract) FLOPs; bytes = in + out.
+  * elementwise / reduce: 1 FLOP per output (resp. input) element;
+    bytes = output only (consumers fuse — a deliberate *approximation*).
+  * data movement (reshape/broadcast/slice/gather/...): bytes = output.
+  * scan: body × length.  while: body × 1 (none in this codebase).
+  * numbers are GLOBAL logical costs; divide by chip count for per-chip
+    roofline terms (replicated compute is not charged — noted).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+_EW = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "erf", "rsqrt", "sqrt", "neg", "abs", "sign", "floor",
+    "ceil", "round", "integer_pow", "select_n", "ne", "eq", "ge", "gt",
+    "le", "lt", "and", "or", "not", "xor", "clamp", "rem", "atan2",
+    "cos", "sin", "cbrt", "expm1", "log1p", "square", "nextafter",
+    "real", "imag", "add_any", "copy", "convert_element_type",
+    "stop_gradient",
+    "is_finite", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "population_count", "clz", "erf_inv",
+}
+_REDUCE = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "reduce_precision",
+}
+_MOVE = {
+    "reshape", "broadcast_in_dim", "transpose", "squeeze", "slice",
+    "concatenate", "pad", "rev", "gather", "dynamic_slice",
+    "dynamic_update_slice", "iota", "scatter", "scatter-add", "scatter_add",
+    "expand_dims", "split",
+}
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+def _nelems(aval) -> int:
+    try:
+        return int(np.prod(aval.shape, dtype=np.int64))
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr", "body_jaxpr"):
+        if key in params:
+            yield key, params[key]
+    if "branches" in params:
+        for b in params["branches"]:
+            yield "branch", b
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+_ZERO = {"flops": 0.0, "bytes": 0.0, "bytes_min": 0.0, "dot_flops": 0.0}
+
+
+def jaxpr_cost(jaxpr) -> Dict[str, float]:
+    """Returns global logical {"flops", "dot_flops", "bytes", "bytes_min"}.
+
+    ``bytes`` charges every primitive's output (unfused UPPER bound on HBM
+    traffic); ``bytes_min`` charges only kernel-boundary ops — dots,
+    reduces, gathers/scatters/sorts/concats — assuming XLA fuses all
+    elementwise/movement chains into their consumers (LOWER bound).  Real
+    traffic lies between; the roofline table reports both.
+    """
+    jaxpr = _as_jaxpr(jaxpr)
+    flops = 0.0
+    byts = 0.0
+    byts_min = 0.0
+    dot_flops = 0.0
+    # convert provenance: a dot operand produced by convert_element_type is
+    # read from HBM at its SOURCE dtype (the convert fuses into the read) —
+    # this is what credits int8 KV caches / bf16 params with their real
+    # bandwidth, not the f32 compute dtype.
+    src_bytes: Dict[Any, int] = {}
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out_elems = sum(_nelems(v.aval) for v in eqn.outvars)
+        out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(
+            _nbytes(v.aval) for v in eqn.invars if hasattr(v, "aval")
+        )
+        if name == "convert_element_type" and len(eqn.outvars) == 1:
+            iv = eqn.invars[0]
+            if hasattr(iv, "aval"):
+                src_bytes[eqn.outvars[0]] = src_bytes.get(iv, _nbytes(iv.aval))
+        if name == "dot_general":
+            dims = eqn.params["dimension_numbers"]
+            (lc, _rc), _ = dims
+            lhs = eqn.invars[0].aval
+            k = 1
+            for d in lc:
+                k *= lhs.shape[d]
+            f = 2.0 * out_elems * k
+            flops += f
+            dot_flops += f
+            in_real = sum(
+                src_bytes.get(v, _nbytes(v.aval))
+                for v in eqn.invars
+                if hasattr(v, "aval")
+            )
+            byts += in_real + out_bytes
+            byts_min += in_real + out_bytes
+        elif name == "scan":
+            length = eqn.params.get("length", 1)
+            sub = jaxpr_cost(eqn.params["jaxpr"])
+            flops += sub["flops"] * length
+            dot_flops += sub["dot_flops"] * length
+            byts += sub["bytes"] * length
+            byts_min += sub["bytes_min"] * length
+        elif name == "while":
+            sub = jaxpr_cost(eqn.params["body_jaxpr"])
+            flops += sub["flops"]
+            dot_flops += sub["dot_flops"]
+            byts += sub["bytes"]
+            byts_min += sub["bytes_min"]
+        elif name in ("cond",):
+            best = dict(_ZERO)
+            for b in eqn.params["branches"]:
+                sub = jaxpr_cost(b)
+                if sub["flops"] >= best["flops"]:
+                    best = sub
+            flops += best["flops"]
+            dot_flops += best["dot_flops"]
+            byts += best["bytes"]
+            byts_min += best["bytes_min"]
+        elif name in _EW:
+            flops += out_elems
+            byts += out_bytes
+        elif name in _REDUCE or name.startswith("reduce_") or name.startswith("cum"):
+            flops += sum(
+                _nelems(v.aval) for v in eqn.invars if hasattr(v, "aval")
+            )
+            byts += in_bytes + out_bytes
+            byts_min += in_bytes + out_bytes
+        elif name in ("gather", "dynamic_slice"):
+            # charge the MOVED bytes, not the whole source buffer (a scan
+            # body slicing one layer from an (L, ...) stack reads one layer)
+            byts += 2 * out_bytes
+            byts_min += 2 * out_bytes
+        elif name in ("scatter", "scatter-add", "scatter_add",
+                      "dynamic_update_slice"):
+            upd = (
+                _nbytes(eqn.invars[-1].aval)
+                if hasattr(eqn.invars[-1], "aval")
+                else out_bytes
+            )
+            byts += 2 * upd
+            byts_min += 2 * upd
+        elif name in ("concatenate", "sort", "top_k"):
+            byts += in_bytes + out_bytes
+            byts_min += in_bytes + out_bytes
+            if name in ("sort", "top_k"):
+                n = max(out_elems, 1)
+                flops += n * max(1, int(np.log2(n)))
+        elif name in _MOVE:
+            byts += out_bytes
+        else:
+            recursed = False
+            for _, sub_j in _sub_jaxprs(eqn.params):
+                sub = jaxpr_cost(sub_j)
+                flops += sub["flops"]
+                dot_flops += sub["dot_flops"]
+                byts += sub["bytes"]
+                byts_min += sub["bytes_min"]
+                recursed = True
+            if not recursed:
+                byts += out_bytes
+    return {"flops": flops, "bytes": byts, "bytes_min": byts_min,
+            "dot_flops": dot_flops}
+
+
+def fn_cost(fn, *args) -> Dict[str, float]:
+    closed = jax.make_jaxpr(fn)(*args)
+    cost = jaxpr_cost(closed)
+    # top-level I/O: params/inputs read once, outputs written once
+    io = sum(_nbytes(v.aval) for v in closed.jaxpr.invars) + sum(
+        _nbytes(v.aval) for v in closed.jaxpr.outvars
+    )
+    cost["bytes"] += io
+    cost["bytes_min"] += io
+    return cost

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes with ShapeDtypeStruct stand-ins (no allocation).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+
+Outputs per cell: memory_analysis (proves it fits), cost_analysis (FLOPs /
+bytes for the roofline), and the collective-byte census parsed from the
+optimized HLO — all persisted to experiments/dryrun/*.json, which
+launch/roofline.py turns into EXPERIMENTS.md tables.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHITECTURES, SHAPES, get_config
+from ..distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    params_shardings,
+)
+from ..models import decode_step, forward, init_cache, param_specs
+from ..train import AdamWConfig, adamw_init_specs, make_train_step
+from .mesh import make_production_mesh
+
+# ----------------------------------------------------------------- specs
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype), tree
+    )
+
+
+def input_specs(arch: str, shape_name: str, cfg=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, no device allocation."""
+    cfg = cfg or get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    i32 = jnp.int32
+    d = cfg.d_model
+    if kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            text = S - cfg.num_patches
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, text), i32),
+                "labels": jax.ShapeDtypeStruct((B, text), i32),
+                "patches": jax.ShapeDtypeStruct((B, cfg.num_patches, d), cfg.jax_dtype),
+            }
+        elif cfg.family == "audio":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, d), cfg.jax_dtype),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against a seq_len cache
+    cache = _sds_tree(
+        jax.eval_shape(lambda: init_cache(cfg, B, S))
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "cache": cache,
+    }
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return (
+            "skipped: pure full-attention arch — 524k dense-attention decode "
+            "is quadratic-cost with no sub-quadratic mechanism in this "
+            "config (DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+# ------------------------------------------------------------- lowering
+_STASH_BUDGET = 6e9  # target per-device remat-carry bytes for train cells
+
+
+def auto_accum(cfg, B: int, S: int, mesh) -> int:
+    """Gradient-accumulation steps so the per-device scan-carry stash
+    (L x microbatch x S x d x 2B) fits the budget: microbatch shrinks to
+    ~1 seq/device for the widest/deepest models."""
+    from ..distributed.sharding import batch_axes, axis_size
+
+    shards = axis_size(mesh, batch_axes(mesh, B)) or 1
+    b_local = max(1, B // shards)
+    stash_per_seq = cfg.num_layers * S * cfg.d_model * 2
+    seqs = max(1, int(_STASH_BUDGET // max(stash_per_seq, 1)))
+    accum = max(1, -(-b_local // seqs))        # ceil
+    if cfg.family == "moe":
+        # MoE dispatch tensors scale with microbatch tokens:
+        # E*C*d ~ 1.25*k*T_micro*d; keep the f32 worst case under ~3 GB.
+        disp = 1.25 * cfg.moe_top_k * B * S * cfg.d_model * 4
+        accum = max(accum, -(-int(disp) // int(3e9)))
+    accum = min(accum, b_local)
+    while b_local % accum:
+        accum += 1
+    return min(accum, b_local)
+
+
+def build_cell(arch: str, shape_name: str, mesh, accum_steps: int = 0):
+    """Returns (jitted_fn, example_args, raw_fn) for the cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, kind = sh["global_batch"], sh["kind"]
+    if kind == "train":
+        # sequence-parallel residual stream: shards the remat stash
+        cfg = dataclasses.replace(cfg, activation_sharding="sp")
+    if kind == "prefill":
+        # SP for prefill too: shards the (B, 32k, d) residual stream
+        cfg = dataclasses.replace(cfg, activation_sharding="sp")
+    if kind == "decode" and cfg.family != "ssm":
+        # int8 KV cache (§Perf A2/A4): halves cache bandwidth + footprint
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if accum_steps == 0 and kind == "train":
+        accum_steps = auto_accum(cfg, B, sh["seq_len"], mesh)
+    accum_steps = max(1, accum_steps)
+    specs = input_specs(arch, shape_name, cfg)
+    pspecs = param_specs(cfg)
+    pshard = params_shardings(pspecs, mesh)
+
+    if kind == "train":
+        ospecs = adamw_init_specs(pspecs)
+        oshard = opt_state_shardings(ospecs, pshard, mesh)
+        bshard = batch_shardings(specs, mesh, B)
+        ocfg = AdamWConfig(total_steps=10000)
+        step = make_train_step(cfg, ocfg, accum_steps=accum_steps)
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (pspecs, ospecs, specs), step
+
+    if kind == "prefill":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..distributed.sharding import batch_axes
+
+        bshard = batch_shardings(specs, mesh, B)
+        baxes = batch_axes(mesh, B)
+        bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+        out_sh = NamedSharding(mesh, P(bspec, "model"))  # vocab-parallel
+
+        def prefill(params, batch):
+            # serving prefill: next-token logits for the LAST position only
+            # (all-position logits are a training-loss construct); the
+            # hidden-state constraint pins batch sharding through the layer
+            # scan (GSPMD otherwise replicates the whole residual stream)
+            from ..models import layers as mlayers
+
+            hidden = forward(params, batch, cfg, return_hidden=True)
+            hidden = jax.lax.with_sharding_constraint(
+                hidden, P(bspec, None, None)
+            )
+            return mlayers.unembed(
+                params["embed"], hidden[:, -1]
+            ).astype(jnp.float32)
+
+        fn = jax.jit(prefill, in_shardings=(pshard, bshard), out_shardings=out_sh)
+        return fn, (pspecs, specs), prefill
+
+    # decode
+    cshard = cache_shardings(specs["cache"], mesh, B)
+    bshard = batch_shardings(
+        {"tokens": specs["tokens"], "pos": specs["pos"]}, mesh, B
+    )
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(pshard, cshard, bshard["tokens"], bshard["pos"]),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+    return fn, (pspecs, specs["cache"], specs["tokens"], specs["pos"]), serve_step
+
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b"
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-kind byte census of every collective op in the optimized HLO.
+
+    The optimized-HLO printer elides operand types, so we size each
+    collective by its RESULT shape(s) (the segment between '=' and the op
+    name; tuples — e.g. all-to-all — contribute every element).  For
+    all-reduce/all-to-all/collective-permute result bytes == operand bytes;
+    for all-gather it is the (post-gather) wire volume each device receives;
+    for reduce-scatter the result understates the input by the group size —
+    acceptable for a relative roofline term and noted in EXPERIMENTS.md.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        # only count op definitions, not operand references on other lines
+        idx = rest.find(m.group(0) + "(")
+        if idx < 0:
+            continue
+        result_seg = rest[:idx]
+        kind = m.group(1)
+        total = 0
+        for dm in _SHAPE_RE.finditer(result_seg):
+            dt, dims = dm.group(1), dm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for p in dims.split(","):
+                if p:
+                    n *= int(p)
+            total += n * _DTYPE_BYTES[dt]
+        if total:
+            out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum_steps: int = 0, verbose: bool = True) -> Dict[str, Any]:
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16", "skip": skip}
+    from . import hlostats
+    from .costmodel import fn_cost
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = SHAPES[shape_name]
+    if accum_steps == 0 and sh["kind"] == "train":
+        cfg0 = dataclasses.replace(get_config(arch), activation_sharding="sp")
+        accum_steps = auto_accum(cfg0, sh["global_batch"], sh["seq_len"], mesh)
+    t0 = time.time()
+    with mesh:
+        fn, args, raw_fn = build_cell(arch, shape_name, mesh, accum_steps)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        jcost = fn_cost(raw_fn, *args)       # exact scan-aware logical cost
+    coll = hlostats.collective_bytes(hlo)    # trip-count-scaled census
+    coll_flat = collective_bytes_from_hlo(hlo)   # unscaled cross-check
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": int(np.prod(list(mesh.shape.values()))),
+        # exact static (global logical) costs from the jaxpr walker
+        "flops": float(jcost["flops"]),
+        "dot_flops": float(jcost["dot_flops"]),
+        "bytes_accessed": float(jcost["bytes"]),
+        # XLA's own numbers (while bodies counted once — cross-check only)
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "collective_bytes_unscaled": coll_flat,
+        "memory": {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_in_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "accum_steps": accum_steps,
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} x {shape_name}: "
+              f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+              f"coll={sum(coll.values()):.3e}B "
+              f"temp={rec['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis(xla): flops=%.4e bytes=%.4e" % (rec["xla_flops"], rec["xla_bytes_accessed"]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--accum-steps", type=int, default=0)  # 0 = auto
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = sorted(ARCHITECTURES) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {tag}")
+            continue
+        try:
+            rec = run_cell(arch, shape, mp, args.accum_steps)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "error": repr(e)[:2000]}
+            print(f"[FAIL] {tag}: {e}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Optimized-HLO statistics: collective-byte census with while-loop
+trip-count scaling.
+
+``compiled.cost_analysis()``/plain text grep count a ``while`` body ONCE,
+but a scan-of-layers body executes L times.  This walker parses the HLO
+module into computations, extracts each while's trip count from its
+condition (induction var compared against a constant), and accumulates
+collective result-bytes multiplied by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-_]+)\s*\(.*\)\s*->.*{\s*$")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _bytes_of_segment(seg: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(seg):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for p in dims.split(","):
+            if p:
+                n *= int(p)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _COMP_HEAD.match(s)
+        if m:
+            cur = m.group(1).lstrip("%")
+            comps[cur] = []
+            if s.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Scan-lowered conditions compare the induction var to a constant."""
+    const = None
+    for l in cond_lines:
+        if "compare(" in l and ("direction=LT" in l or "direction=GT" in l):
+            pass
+    for l in cond_lines:
+        m = _CONST_RE.search(l)
+        if m:
+            v = int(m.group(1))
+            const = v if const is None else max(const, v)
+    return const if const else 1
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_computations(hlo)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    def local_and_calls(name: str):
+        coll: Dict[str, int] = {}
+        calls: List[Tuple[str, int]] = []
+        for l in comps.get(name, ()):
+            if "=" not in l:
+                continue
+            for kind in _COLL_KINDS:
+                tok = kind + "("
+                idx = l.find(tok)
+                # guard: "-start(" variants
+                if idx < 0:
+                    idx2 = l.find(kind + "-start(")
+                    if idx2 >= 0:
+                        idx = idx2
+                        tok = kind + "-start("
+                if idx < 0:
+                    continue
+                head = l.split("=", 1)[1][: idx - l.find("=") - 1]
+                b = _bytes_of_segment(head)
+                if b:
+                    coll[kind] = coll.get(kind, 0) + b
+                break
+            if " while(" in l or l.startswith("while(") or "= while" in l or re.search(r"\bwhile\(", l):
+                mb = re.search(r"body=(%?[\w\.\-_]+)", l)
+                mc = re.search(r"condition=(%?[\w\.\-_]+)", l)
+                if mb and mc:
+                    trips = _trip_count(comps.get(mc.group(1).lstrip("%"), []))
+                    calls.append((mb.group(1).lstrip("%"), trips))
+            else:
+                for key in ("calls=", "body=", "branch_computations={"):
+                    if key in l:
+                        for nm in re.findall(r"(?:calls=|body=)(%?[\w\.\-_]+)", l):
+                            calls.append((nm.lstrip("%"), 1))
+                        break
+        return coll, calls
+
+    memo: Dict[str, Dict[str, float]] = {}
+    visiting = set()
+
+    def volume(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in visiting:
+            return {}
+        visiting.add(name)
+        coll, calls = local_and_calls(name)
+        total = {k: float(v) for k, v in coll.items()}
+        for callee, trips in calls:
+            sub = volume(callee)
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + v * trips
+        visiting.discard(name)
+        memo[name] = total
+        return total
+
+    return volume(entry) if entry else {}

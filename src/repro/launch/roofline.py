@@ -1,0 +1,145 @@
+"""Roofline analysis from the dry-run artifacts (brief §Roofline).
+
+Per (arch × shape) on the single-pod mesh, three terms in SECONDS:
+
+    compute    = FLOPs / (chips × peak)         peak = 197 TF/s bf16 MXU
+    memory     = bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s ICI per link)
+
+FLOPs/bytes come from the exact scan-aware jaxpr walker (global logical
+costs — see launch/costmodel.py conventions); collective bytes come from the
+trip-count-scaled optimized-HLO census.  The dominant term is the
+bottleneck; MODEL_FLOPS = 6·N·D (train, dense), 6·N_active·D (MoE),
+2·N·D (inference) and the MODEL_FLOPS/HLO_FLOPs ratio exposes
+remat/redundancy waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from ..configs import ARCHITECTURES, SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # per chip
+ICI_BW = 50e9                # per link
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    n = cfg.active_param_count_estimate()
+    if kind == "train":
+        return 6.0 * n * B * S
+    if kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B        # decode: one token per sequence
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if "skip" in rec or "error" in rec:
+        return None
+    chips = rec["num_devices"]
+    flops = rec["flops"]
+    byts_hi = rec["bytes_accessed"]
+    byts_lo = rec.get("bytes_min", byts_hi)
+    byts = (byts_lo * byts_hi) ** 0.5 if byts_lo else byts_hi  # geo-mean est.
+    coll = sum(rec.get("collective_bytes", {}).values())
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = byts / (chips * HBM_BW)
+    t_x = coll / (chips * ICI_BW)
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"])
+    bound = max(t_c, t_m, t_x)
+    # roofline fraction: useful-model-FLOP time over the bound time
+    useful_t = mf / (chips * PEAK_FLOPS)
+    return {
+        **rec,
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_memory_lo_s": byts_lo / (chips * HBM_BW),
+        "t_memory_hi_s": byts_hi / (chips * HBM_BW),
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": useful_t / bound if bound else 0.0,
+    }
+
+
+def _advice(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "memory":
+        if row["shape"].startswith("decode") or row["shape"].startswith("long"):
+            return "decode is weight/cache-bandwidth bound: batch more requests per chip or quantize KV/weights"
+        return "reduce activation re-reads: larger fused kernels (stitching), bf16 stash, fewer remat passes"
+    if d == "compute":
+        if row["useful_ratio"] < 0.6:
+            return "compute includes remat recompute: relax remat policy / save dots"
+        return "near compute roof: raise MXU utilization via tile-aligned shapes"
+    return "collective-bound: overlap reduce-scatter with backward, compress grads, reorder sharding axes"
+
+
+def build_table(dir_: str, mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh:
+            continue
+        rows.append(analyze(rec) or rec)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "MODEL_FLOPS | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skip" in r:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | "
+                f"{r['skip'].split(':')[0]} |"
+            )
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        out.append(
+            "| {arch} | {shape} | {tc:.2e} s | {tm:.2e} s | {tx:.2e} s | "
+            "**{dom}** | {mf:.2e} | {ur:.2f} | {rf:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], tc=r["t_compute_s"],
+                tm=r["t_memory_s"], tx=r["t_collective_s"], dom=r["dominant"],
+                mf=r["model_flops"], ur=r["useful_ratio"],
+                rf=r["roofline_fraction"],
+            )
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = build_table(args.dir, args.mesh)
+    print(to_markdown(rows))
+    print()
+    for r in rows:
+        if "dominant" in r:
+            print(f"{r['arch']:>24s} x {r['shape']:<12s}: {_advice(r)}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

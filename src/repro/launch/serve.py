@@ -1,0 +1,57 @@
+"""Serving launcher: batched decode on a selected architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --requests 8 --max-new 16 [--reduced]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, reduced_config
+from ..models import count_params, init_params
+from ..serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = reduced_config(cfg)
+    params = init_params(cfg, seed=0)
+    print(f"[serve] {cfg.name}: {count_params(params):,} params, "
+          f"pool={args.pool}, max_len={args.max_len}")
+    engine = ServeEngine(cfg, params, pool_size=args.pool, max_len=args.max_len)
+    rng = np.random.RandomState(0)
+    reqs = [
+        Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, size=rng.randint(4, 12)),
+                max_new_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+    pending = list(reqs)
+    t0 = time.perf_counter()
+    ticks = 0
+    while (pending or any(r is not None for r in engine.slot_req)) and ticks < 2000:
+        while pending and engine.admit(pending[0]):
+            pending.pop(0)
+        engine.tick()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens or []) for r in reqs)
+    print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} done, "
+          f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: unified transformer covering dense / MoE / SSM / hybrid /
+VLM-backbone / audio-enc-dec families."""
+from .module import Creator, count_params, tree_bytes
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_specs,
+    prefill_cross_attention,
+)

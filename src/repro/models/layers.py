@@ -1,0 +1,416 @@
+"""Layer library: norms, rotary embeddings (RoPE / M-RoPE / sinusoidal),
+GQA attention (online-softmax chunked for long sequences, cache decode,
+sliding window, cross attention), SwiGLU/GELU MLPs, and MoE (dense smoke
+mode + capacity-based scatter dispatch for expert parallelism at scale).
+
+Everything is written against *global* logical shapes — pjit/GSPMD handles
+partitioning; sharding constraints live in repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .module import Creator, Params
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm_params(c: Creator, d: int) -> Params:
+    return {"gamma": c.param((d,), "ones", dtype=jnp.float32)}
+
+
+def rmsnorm(p: Params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * p["gamma"]).astype(x.dtype)
+
+
+def layernorm_params(c: Creator, d: int) -> Params:
+    return {
+        "gamma": c.param((d,), "ones", dtype=jnp.float32),
+        "beta": c.param((d,), "zeros", dtype=jnp.float32),
+    }
+
+
+def layernorm(p: Params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]).astype(
+        x.dtype
+    )
+
+
+# ------------------------------------------------------------------ linear
+def linear_params(c: Creator, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": c.param((d_in, d_out), "fan_in")}
+    if bias:
+        p["b"] = c.param((d_out,), "zeros", dtype=jnp.float32)
+    return p
+
+
+def linear(p: Params, x):
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = (y.astype(jnp.float32) + p["b"]).astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- rotary
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, half)
+    ang = ang[..., None, :]                                       # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope(x, positions3, sections: Tuple[int, int, int], theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE.  positions3: (3, ..., S) for (t, h, w);
+    frequency slots are split into three sections, each rotated by its own
+    positional stream."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )                                                            # (half,)
+    # pick the positional stream per frequency slot via a one-hot mix
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)        # (half, 3)
+    pos_t = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (..., S, 3)
+    pos_mix = jnp.einsum("...k,hk->...h", pos_t, onehot)         # (..., S, half)
+    ang = (pos_mix * freqs)[..., None, :]                        # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    inv = 1e4 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (S, d)
+
+
+# -------------------------------------------------------------- attention
+def attention_params(c: Creator, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": linear_params(c, d, cfg.num_heads * hd, cfg.qkv_bias),
+        "wk": linear_params(c, d, cfg.num_kv_heads * hd, cfg.qkv_bias),
+        "wv": linear_params(c, d, cfg.num_kv_heads * hd, cfg.qkv_bias),
+        "wo": linear_params(c, cfg.num_heads * hd, d, False),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def online_attention(
+    q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+    sliding_window: int = 0, q_offset: int = 0,
+):
+    """Online-softmax (flash-style) attention in pure jnp + lax.scan.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd).  GSPMD-shardable; never
+    materializes the full (Sq, Sk) score matrix — required for the 32k
+    prefill cells.  This is the jnp twin of kernels/stitched_attention.py
+    (the Pallas kernel is the single-device TPU fast path).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+    cq = min(q_chunk, Sq)
+    ck = min(kv_chunk, Sk)
+    while Sq % cq:
+        cq -= 1
+    while Sk % ck:
+        ck -= 1
+    nq, nk = Sq // cq, Sk // ck
+    # GQA WITHOUT jnp.repeat: a grouped einsum over (kv-head, group) keeps
+    # K/V unexpanded — MQA (G=H) would otherwise replicate the cache H×.
+    q_ = q.reshape(B, nq, cq, Hkv, G, hd)
+    k_ = k.reshape(B, nk, ck, Hkv, hd)
+    v_ = v.reshape(B, nk, ck, Hkv, hd)
+    out_dtype = q.dtype
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_step_inner(iq):
+        # rematerialized in backward: without this, autodiff through the
+        # nested scans stashes EVERY (cq, ck) probability chunk — the full
+        # score matrix — defeating the online-softmax memory savings.
+        qc = q_[:, iq].astype(jnp.float32) * scale   # (B, cq, Hkv, G, hd)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kc = k_[:, ik].astype(jnp.float32)       # (B, ck, Hkv, hd)
+            vc = v_[:, ik].astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc)
+            qpos = q_offset + iq * cq + jnp.arange(cq)
+            kpos = ik * ck + jnp.arange(ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if sliding_window:
+                mask &= qpos[:, None] - kpos[None, :] < sliding_window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, cq), jnp.float32),
+            jnp.zeros((B, Hkv, G, cq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / l[..., None]                      # (B, Hkv, G, cq, hd)
+        # cast BEFORE the outer scan stacks chunks (f32 stacking doubles the
+        # activation output footprint at 32k sequence lengths)
+        return out.transpose(0, 3, 1, 2, 4).astype(out_dtype)  # (B,cq,Hkv,G,hd)
+
+    def q_step(_, iq):
+        return None, q_step_inner(iq)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq,B,cq,Hkv,G,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+def decode_attention_jnp(q, k_cache, v_cache, length,
+                         k_scale=None, v_scale=None):
+    """q: (B, H, hd) one token; caches (B, S, Hkv, hd); length () or (B,).
+
+    Grouped einsum (no KV expansion).  The hd contraction is sharded over
+    'model' (cache head_dim sharding) — GSPMD inserts one small psum for the
+    scores; softmax is then local over the full cache length.
+
+    With ``k_scale/v_scale`` (B, S, Hkv) the caches are int8 and the scales
+    fold into the scores/weights AFTER the int8 reads — HBM traffic is the
+    int8 payload (the decode memory-roofline lever).
+    """
+    B, H, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * scale
+    # pin q's head_dim to the cache's 'model' sharding so GSPMD contracts
+    # the sharded hd (one tiny psum on the scores) instead of resharding
+    # the WHOLE cache to head-sharded every step (§Perf iteration A3; the
+    # "involuntary full rematerialization" copy in the SPMD log)
+    qg = _constrain_last_dim_model(qg)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kc)          # (B, Hkv, G, S)
+    if k_scale is not None:
+        s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :]
+    valid = jnp.arange(S)[None, None, None, :] < jnp.reshape(length, (-1, 1, 1, 1))
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    if v_scale is not None:
+        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :]
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, vc) / jnp.sum(
+        jnp.exp(s - m), axis=-1
+    )[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def _constrain_last_dim_model(x):
+    """Shard the last dim over 'model' when a mesh is active and divides."""
+    from ..distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if x.shape[-1] % mesh.shape["model"]:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        spec = [None] * (x.ndim - 1) + ["model"]
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def quantize_kv_int8(x):
+    """x: (B, Hkv, hd) -> (int8 values, (B, Hkv) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+    s = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+# ------------------------------------------------------------------- MLPs
+def swiglu_params(c: Creator, d: int, ff: int) -> Params:
+    return {
+        "wi": linear_params(c, d, ff),
+        "wg": linear_params(c, d, ff),
+        "wo": linear_params(c, ff, d),
+    }
+
+
+def swiglu(p: Params, x):
+    return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))
+
+
+def gelu_mlp_params(c: Creator, d: int, ff: int) -> Params:
+    return {
+        "wi": linear_params(c, d, ff, bias=True),
+        "wo": linear_params(c, ff, d, bias=True),
+    }
+
+
+def gelu_mlp(p: Params, x):
+    return linear(p["wo"], jax.nn.gelu(linear(p["wi"], x)))
+
+
+def _constrain_rows_model(x):
+    """Shard a (rows, d) expert-dispatch buffer's rows over 'model' (EP):
+    keeps the scatter/gather path from replicating the whole dispatch
+    tensor per device.  No-op outside a mesh context."""
+    from ..distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if x.shape[0] % mesh.shape["model"]:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P("model", None))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# -------------------------------------------------------------------- MoE
+def moe_params(c: Creator, cfg) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    Ep = E + cfg.moe_pad_experts      # dummy experts receive no tokens
+    return {
+        "router": c.param((d, E), "fan_in", dtype=jnp.float32),
+        "wi": c.param((Ep, d, ff), "fan_in"),
+        "wg": c.param((Ep, d, ff), "fan_in"),
+        "wo": c.param((Ep, ff, d), "fan_in"),
+    }
+
+
+def _router(p: Params, x, cfg):
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx                                      # (..., k)
+
+
+def moe_dense(p: Params, x, cfg):
+    """Smoke-test mode: every expert computes every token, masked combine.
+    Exact (no capacity drops); O(E) compute — tiny configs only."""
+    w, idx = _router(p, x, cfg)                        # (B, S, k)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wg"])
+    hi = jnp.einsum("bsd,edf->bsef", x, p["wi"])
+    y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h) * hi, p["wo"])
+    onehot = jax.nn.one_hot(
+        idx, cfg.moe_experts + cfg.moe_pad_experts, dtype=jnp.float32
+    )  # (B,S,k,Ep)
+    mix = jnp.einsum("bske,bsk->bse", onehot, w)
+    return jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), mix).astype(x.dtype)
+
+
+def moe_scatter(p: Params, x, cfg):
+    """GROUP-WISE capacity dispatch (EP at scale): each sequence is its own
+    GShard group — routing positions, the (E, C_g, d) expert batches, and
+    the combine are all computed per group via vmap, so every dispatch
+    tensor carries the BATCH dim and shards over (pod, data).  (A global
+    dispatch's capacity tensor scales with ALL tokens and replicates — the
+    51 GiB MoE-prefill blow-up in EXPERIMENTS §Dry-run.)  Over-capacity
+    tokens within a group drop (standard GShard semantics).
+    """
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    Ep = E + cfg.moe_pad_experts
+    w, idx = _router(p, x, cfg)                        # (B, S, k)
+    C = int(np.ceil(cfg.moe_capacity_factor * k * S / E))
+    C = max(64, (C + 63) // 64 * 64)
+
+    def per_group(xg, wg_, idxg):
+        """xg (S, d); idxg (S, k) -> (S·k routing within this group)."""
+        flat_e = idxg.reshape(-1)                      # (S*k,)
+        # int16 routing cumsum (§Perf B6): C < 32768 at any group size
+        pos_dt = jnp.int16 if C < 32767 else jnp.int32
+        onehot = jax.nn.one_hot(flat_e, E, dtype=pos_dt)      # (S*k, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)
+        keep = slot < C
+        token_of = jnp.repeat(jnp.arange(S), k)
+        flat_slot = jnp.where(keep, flat_e * C + slot, Ep * C)
+        gathered = jnp.zeros((Ep * C + 64, d), xg.dtype).at[flat_slot].set(
+            xg[token_of]
+        )
+        return gathered[: Ep * C].reshape(Ep, C, d), flat_slot, keep
+
+    ein, flat_slot, keep = jax.vmap(per_group)(x, w, idx)     # (B,Ep,C,d)
+    h = jnp.einsum("gecd,edf->gecf", ein, p["wg"])
+    hi = jnp.einsum("gecd,edf->gecf", ein, p["wi"])
+    out_e = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * hi, p["wo"])
+
+    def combine(rows_g, slot_g, keep_g, w_g):
+        rows = rows_g.reshape(Ep * C, d)
+        # bf16 combine (§Perf B4): f32 accumulate on the MXU only
+        picked = jnp.where(
+            keep_g[:, None], rows[jnp.minimum(slot_g, Ep * C - 1)],
+            jnp.zeros((), rows.dtype),
+        )                                              # (S*k, d)
+        return jnp.einsum(
+            "skd,sk->sd", picked.reshape(S, k, d), w_g.astype(picked.dtype),
+            preferred_element_type=jnp.float32,
+        )
+
+    yt = jax.vmap(combine)(out_e, flat_slot, keep, w)  # (B, S, d)
+    return yt.astype(x.dtype)
+
+
+def moe(p: Params, x, cfg):
+    if cfg.moe_impl == "dense":
+        return moe_dense(p, x, cfg)
+    return moe_scatter(p, x, cfg)
+
+
+# -------------------------------------------------------------- embedding
+def embedding_params(c: Creator, cfg) -> Params:
+    return {
+        "tok": c.param((cfg.padded_vocab, cfg.d_model), "normal"),
+        "unembed": c.param((cfg.d_model, cfg.padded_vocab), "fan_in"),
+    }
+
+
+def embed(p: Params, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: Params, x):
+    return jnp.einsum("...d,dv->...v", x, p["unembed"])

@@ -1,0 +1,206 @@
+"""Mamba2 — SSD (state-space duality) block, arXiv:2405.21060.
+
+Training/prefill uses the chunked dual form (quadratic attention-like
+intra-chunk einsums + linear inter-chunk recurrence — all MXU-friendly);
+decode is the O(1)-per-token recurrent state update, which is what makes the
+``long_500k`` cell tractable for the SSM/hybrid architectures.
+
+ngroups=1 (B/C shared across heads), depthwise causal conv width 4 on
+(x, B, C), gated RMSNorm output — the standard minimal-Mamba2 structure.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_params, rmsnorm
+from .module import Creator, Params
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_inner, num_heads, head_dim P, state N)."""
+    if cfg.family == "hybrid":
+        d_in = cfg.num_heads * cfg.ssm_head_dim        # parallel-head width
+    else:
+        d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    return d_in, H, P, cfg.ssm_state
+
+
+def mamba2_params(c: Creator, cfg) -> Params:
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": linear_params(c, d, 2 * d_in + 2 * N + H),
+        "conv_w": c.param((cfg.ssm_conv_width, conv_ch), "normal", scale=0.1),
+        "conv_b": c.param((conv_ch,), "zeros", dtype=jnp.float32),
+        "A_log": c.param((H,), "zeros", dtype=jnp.float32),
+        "D": c.param((H,), "ones", dtype=jnp.float32),
+        "dt_bias": c.param((H,), "zeros", dtype=jnp.float32),
+        "norm": {"gamma": c.param((d_in,), "ones", dtype=jnp.float32)},
+        "out_proj": linear_params(c, d_in, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pads[:, i: i + x.shape[1]].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def _segsum(dA):
+    """dA: (..., L, H) -> cumulative decay matrix T[i, j] = sum_{j<k<=i} dA_k
+    (lower-triangular; -inf above the diagonal)."""
+    L = dA.shape[-2]
+    cs = jnp.cumsum(dA, axis=-2)                               # (..., L, H)
+    diff = cs[..., :, None, :] - cs[..., None, :, :]           # (..., L, L, H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask[..., None], diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, D, chunk: int):
+    """The SSD dual-form scan.
+
+    x  : (B, S, H, P)   dt : (B, S, H)  (post-softplus)
+    Bm : (B, S, N)      Cm : (B, S, N)
+    returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    b, S, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    A = -jnp.exp(A_log.astype(jnp.float32))                    # (H,)
+    dA = dt * A                                                # (B, S, H)
+    xc = x.reshape(b, nc, c, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, c, H)
+    dAc = dA.reshape(b, nc, c, H)
+    Bc = Bm.reshape(b, nc, c, N).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, c, N).astype(jnp.float32)
+
+    # intra-chunk (quadratic within chunk, like masked attention)
+    Lmat = jnp.exp(_segsum(dAc))                               # (b,nc,c,c,H)
+    scores = jnp.einsum("bzln,bzsn->bzls", Cc, Bc)             # (b,nc,c,c)
+    M = scores[..., None] * Lmat                               # (b,nc,l,s,H)
+    y_diag = jnp.einsum("bzlsh,bzsh,bzshp->bzlhp", M, dtc, xc)
+
+    # chunk-final states
+    cs = jnp.cumsum(dAc, axis=2)                               # (b,nc,c,H)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)              # (b,nc,c,H)
+    states = jnp.einsum("bzsn,bzsh,bzshp->bzhpn", Bc, decay_to_end * dtc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                     # (b,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = st + dec[..., None, None] * s_prev
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    final, prevs = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prevs, 0, 1)                    # (b,nc,H,P,N)
+
+    decay_from_start = jnp.exp(cs)                             # (b,nc,c,H)
+    y_off = jnp.einsum(
+        "bzln,bzhpn,bzlh->bzlhp", Cc, prev_states, decay_from_start
+    )
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def mamba2_forward(p: Params, x, cfg, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d).  Full-sequence (train / prefill)."""
+    B, S, d = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    zxbcdt = linear(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    )
+    xs, Bm, Cm = (
+        conv_out[..., :d_in],
+        conv_out[..., d_in: d_in + N],
+        conv_out[..., d_in + N:],
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(B, S, H, P)
+    y, state = ssd_chunked(xh, dt, p["A_log"], Bm, Cm, p["D"], chunk=128)
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(p["norm"], (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    if return_state:
+        conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode_step(p: Params, x, cache: Dict, cfg, active=None):
+    """x: (B, d) one token; O(1) state update (the long_500k path).
+
+    ``active``: optional (B,) bool — inactive rows keep their old state
+    (continuous-batching write mask)."""
+    B, d = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    zxbcdt = linear(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)           # (B, C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), p["conv_w"]
+    ) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in: d_in + N]
+    Cm = conv_out[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                        # (B, H)
+    xh = xs.reshape(B, H, P)
+    state = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_in)
+    y = rmsnorm(
+        p["norm"],
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        cfg.norm_eps,
+    )
+    out = linear(p["out_proj"], y)
+    new_conv = window[:, 1:, :].astype(cache["conv"].dtype)
+    if active is not None:
+        sel = active.reshape(B, *([1] * (state.ndim - 1)))
+        state = jnp.where(sel, state, cache["ssm"])
+        selc = active.reshape(B, *([1] * (new_conv.ndim - 1)))
+        new_conv = jnp.where(selc, new_conv, cache["conv"])
+    new_cache = {"ssm": state, "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,446 @@
+"""Unified model assembly for all assigned architecture families.
+
+One decoder-LM skeleton with per-family layer bodies (dense / MoE / SSM /
+hybrid / VLM backbone / whisper enc-dec), scan-over-layers with stacked
+params (HLO size O(1) in depth — keeps 512-device SPMD compiles tractable),
+configurable remat, full-sequence ``forward`` (train/prefill) and O(1)
+``decode_step`` with KV / SSM-state / sliding-window-ring caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+from .module import Creator, Params, stack_layers
+
+
+# ======================================================================
+# parameter construction
+# ======================================================================
+def layer_params(c: Creator, cfg) -> Params:
+    fam = cfg.family
+    p: Params = {"ln1": L.rmsnorm_params(c, cfg.d_model)}
+    if fam == "ssm":
+        p["mamba"] = S.mamba2_params(c, cfg)
+        return p
+    if fam == "audio":  # whisper decoder layer (pre-LN layernorm, GELU mlp)
+        return {
+            "ln1": L.layernorm_params(c, cfg.d_model),
+            "attn": L.attention_params(c, cfg),
+            "lnx": L.layernorm_params(c, cfg.d_model),
+            "xattn": L.attention_params(c, cfg),
+            "ln2": L.layernorm_params(c, cfg.d_model),
+            "mlp": L.gelu_mlp_params(c, cfg.d_model, cfg.d_ff),
+        }
+    p["attn"] = L.attention_params(c, cfg)
+    if fam == "hybrid":
+        p["mamba"] = S.mamba2_params(c, cfg)
+        p["norm_a"] = L.rmsnorm_params(c, cfg.d_model)
+        p["norm_m"] = L.rmsnorm_params(c, cfg.d_model)
+    p["ln2"] = L.rmsnorm_params(c, cfg.d_model)
+    if fam == "moe":
+        p["moe"] = L.moe_params(c, cfg)
+    else:
+        p["mlp"] = L.swiglu_params(c, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def encoder_layer_params(c: Creator, cfg) -> Params:
+    return {
+        "ln1": L.layernorm_params(c, cfg.d_model),
+        "attn": L.attention_params(c, cfg),
+        "ln2": L.layernorm_params(c, cfg.d_model),
+        "mlp": L.gelu_mlp_params(c, cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_params(cfg, rng: Optional[jax.Array] = None,
+                 materialize: bool = True) -> Params:
+    c = Creator(rng, cfg.jax_dtype, materialize)
+    p: Params = {"embed": L.embedding_params(c, cfg)}
+    p["layers"] = stack_layers(lambda cc: layer_params(cc, cfg), c, cfg.num_layers)
+    if cfg.family == "audio":
+        p["ln_f"] = L.layernorm_params(c, cfg.d_model)
+        p["enc_layers"] = stack_layers(
+            lambda cc: encoder_layer_params(cc, cfg), c, cfg.encoder_layers
+        )
+        p["enc_ln_f"] = L.layernorm_params(c, cfg.d_model)
+    else:
+        p["ln_f"] = L.rmsnorm_params(c, cfg.d_model)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L.linear_params(c, cfg.d_model, cfg.d_model)
+    return p
+
+
+def param_specs(cfg) -> Params:
+    return model_params(cfg, rng=None, materialize=False)
+
+
+def init_params(cfg, seed: int = 0) -> Params:
+    return model_params(cfg, rng=jax.random.PRNGKey(seed), materialize=True)
+
+
+# ======================================================================
+# full-sequence forward (train / prefill)
+# ======================================================================
+def _attn_full(p, x, cfg, positions, causal=True, kv_x=None, use_mrope=False,
+               positions3=None):
+    """x: (B, S, d) -> (B, S, d) attention with online softmax."""
+    B, Sq, d = x.shape
+    hd, H, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    src = x if kv_x is None else kv_x
+    q = L._split_heads(L.linear(p["wq"], x), H, hd)
+    k = L._split_heads(L.linear(p["wk"], src), Hkv, hd)
+    v = L._split_heads(L.linear(p["wv"], src), Hkv, hd)
+    if cfg.family != "audio":  # whisper uses additive sinusoidal positions
+        if use_mrope:
+            q = L.mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+            k = L.mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+        elif kv_x is None:
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+    o = L.online_attention(
+        q, k, v,
+        causal=causal and kv_x is None,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        sliding_window=cfg.sliding_window if kv_x is None else 0,
+    )
+    return L.linear(p["wo"], o.reshape(B, Sq, H * hd))
+
+
+def _layer_fwd(lp: Params, x, cfg, positions, positions3=None, enc_out=None):
+    fam = cfg.family
+    if fam == "ssm":
+        return x + S.mamba2_forward(lp["mamba"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
+    if fam == "audio":
+        h = L.layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _attn_full(lp["attn"], h, cfg, positions, causal=True)
+        hx = L.layernorm(lp["lnx"], x, cfg.norm_eps)
+        x = x + _attn_full(lp["xattn"], hx, cfg, positions, kv_x=enc_out)
+        h2 = L.layernorm(lp["ln2"], x, cfg.norm_eps)
+        return x + L.gelu_mlp(lp["mlp"], h2)
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if fam == "hybrid":
+        a = _ckpt_name(_attn_full(lp["attn"], h, cfg, positions), "attn_out", cfg)
+        m = S.mamba2_forward(lp["mamba"], h, cfg)
+        mix = (
+            L.rmsnorm(lp["norm_a"], a, cfg.norm_eps).astype(jnp.float32)
+            + L.rmsnorm(lp["norm_m"], m, cfg.norm_eps).astype(jnp.float32)
+        ) * 0.5
+        x = x + mix.astype(x.dtype)
+    else:
+        x = x + _ckpt_name(
+            _attn_full(
+                lp["attn"], h, cfg, positions,
+                use_mrope=cfg.mrope, positions3=positions3,
+            ),
+            "attn_out", cfg,
+        )
+    h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if fam == "moe":
+        return x + _ckpt_name(L.moe(lp["moe"], h2, cfg), "ffn_out", cfg)
+    return x + _ckpt_name(L.swiglu(lp["mlp"], h2), "ffn_out", cfg)
+
+
+def _ckpt_name(x, name: str, cfg=None):
+    """Tag for selective remat — a no-op otherwise (the tag itself makes
+    XLA materialize the boundary, +4.5 GiB on mistral under full remat)."""
+    if cfg is None or cfg.remat != "selective":
+        return x
+    from jax.ad_checkpoint import checkpoint_name
+
+    return checkpoint_name(x, name)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+    if cfg.remat == "selective":
+        # save ONLY the per-layer attention/FFN outputs ((B,S,d)-shaped):
+        # kills most recompute at 3x the carry stash — the middle ground
+        # between "full" (useful≈0.73) and "dots" (HBM blow-up), §Perf C2
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out"
+            ),
+        )
+    return jax.checkpoint(fn)
+
+
+def _scan_layers(stacked: Params, x, body, cfg=None):
+    sp = cfg is not None and cfg.activation_sharding == "sp"
+    if sp:
+        from ..distributed.sharding import constrain_sp
+
+    def step(carry, lp):
+        out = body(lp, carry)
+        if sp:
+            out = constrain_sp(out)   # shard the remat stash 'model'-ways
+        return out, None
+
+    if sp:
+        x = constrain_sp(x)
+    out, _ = jax.lax.scan(step, x, stacked)
+    return out
+
+
+def mrope_positions(cfg, B: int, S_total: int):
+    """(3, B, S): patches get (0, h, w) on a sqrt grid; text gets (t, t, t)."""
+    P = cfg.num_patches
+    g = max(1, int(P ** 0.5))
+    idx = jnp.arange(P)
+    pt = jnp.zeros((P,), jnp.int32)
+    ph = (idx // g).astype(jnp.int32)
+    pw = (idx % g).astype(jnp.int32)
+    t_text = jnp.arange(S_total - P, dtype=jnp.int32) + g
+    three = jnp.stack(
+        [
+            jnp.concatenate([pt, t_text]),
+            jnp.concatenate([ph, t_text]),
+            jnp.concatenate([pw, t_text]),
+        ]
+    )                                                   # (3, S)
+    return jnp.broadcast_to(three[:, None, :], (3, B, S_total))
+
+
+def encode_audio(params: Params, frames, cfg):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    B, Se, d = frames.shape
+    x = frames + L.sinusoidal_positions(Se, d).astype(frames.dtype)[None]
+
+    def body(lp, h):
+        z = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+        h = h + _attn_full(lp["attn"], z, cfg, None, causal=False)
+        z2 = L.layernorm(lp["ln2"], h, cfg.norm_eps)
+        return h + L.gelu_mlp(lp["mlp"], z2)
+
+    x = _scan_layers(params["enc_layers"], x, _remat(body, cfg), cfg)
+    return L.layernorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def forward(params: Params, batch: Dict[str, Any], cfg,
+            return_hidden: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, padded_vocab) in f32, or the
+    pre-unembed hidden states (B, S, d) when ``return_hidden`` (the chunked
+    vocab-parallel loss path — avoids materializing all-position logits)."""
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions3 = None
+    enc_out = None
+    if cfg.family == "vlm":
+        patches = L.linear(params["patch_proj"], batch["patches"]).astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        positions3 = mrope_positions(cfg, B, x.shape[1])
+    if cfg.family == "audio":
+        enc_out = encode_audio(params, batch["frames"], cfg)
+        x = x + L.sinusoidal_positions(S_text, cfg.d_model).astype(x.dtype)[None]
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    body = _remat(
+        functools.partial(
+            _layer_fwd, cfg=cfg, positions=positions,
+            positions3=positions3, enc_out=enc_out,
+        ),
+        cfg,
+    )
+    x = _scan_layers(params["layers"], x, lambda lp, h: body(lp, h), cfg)
+    if cfg.family == "audio":
+        x = L.layernorm(params["ln_f"], x, cfg.norm_eps)
+    else:
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, -S_text:]                    # loss over text positions only
+    if return_hidden:
+        return x
+    logits = L.unembed(params["embed"], x).astype(jnp.float32)
+    return logits
+
+
+# ======================================================================
+# decode path (serving)
+# ======================================================================
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    """Stacked (L, ...) cache pytree.  Sliding-window archs use a ring of
+    size ``min(window, max_len)``; SSM keeps O(1) state."""
+    Lh, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.jax_dtype
+    cache: Params = {}
+    if cfg.family == "ssm":
+        one = S.mamba2_init_cache(cfg, batch, dt)
+        cache["mamba"] = jax.tree.map(
+            lambda a: jnp.zeros((Lh,) + a.shape, a.dtype), one
+        )
+        return cache
+    W = max_len if not cfg.sliding_window else min(cfg.sliding_window, max_len)
+    kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dt
+    # W ring slots + 1 parking slot for masked (inactive-row) writes
+    cache["k"] = jnp.zeros((Lh, batch, W + 1, Hkv, hd), kv_dt)
+    cache["v"] = jnp.zeros((Lh, batch, W + 1, Hkv, hd), kv_dt)
+    if cfg.kv_cache_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((Lh, batch, W + 1, Hkv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((Lh, batch, W + 1, Hkv), jnp.float32)
+    if cfg.family == "hybrid":
+        one = S.mamba2_init_cache(cfg, batch, dt)
+        cache["mamba"] = jax.tree.map(
+            lambda a: jnp.zeros((Lh,) + a.shape, a.dtype), one
+        )
+    if cfg.family == "audio":
+        cache["xk"] = jnp.zeros((Lh, batch, cfg.encoder_seq, Hkv, hd), dt)
+        cache["xv"] = jnp.zeros((Lh, batch, cfg.encoder_seq, Hkv, hd), dt)
+    return cache
+
+
+def _attn_decode(p, x, cache_l, pos, cfg, window: int, active=None,
+                 keys=("k", "v")):
+    """x: (B, d) one token; cache_l holds (B, W, Hkv, hd) ring caches
+    (plus (B, W, Hkv) scale planes when the cache is int8-quantized).
+
+    ``pos``: (B,) per-slot absolute positions (continuous batching);
+    ``active``: optional (B,) bool write mask."""
+    kk, vk = keys
+    kc, vc = cache_l[kk], cache_l[vk]
+    B, d = x.shape
+    hd, H, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = L.linear(p["wq"], x).reshape(B, H, hd)
+    k = L.linear(p["wk"], x).reshape(B, Hkv, hd)
+    v = L.linear(p["wv"], x).reshape(B, Hkv, hd)
+    posb = pos.reshape(B, 1)
+    if cfg.family != "audio":
+        q = L.rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta).reshape(B, H, hd)
+        k = L.rope(k.reshape(B, 1, Hkv, hd), posb, cfg.rope_theta).reshape(B, Hkv, hd)
+    # cache layout: W ring slots + 1 PARKING slot (index W).  Inactive
+    # batch rows write to the parking slot instead of a masked full-cache
+    # jnp.where copy — the where materialized a whole-cache rewrite per
+    # layer per step (§Perf iteration A1); the parking row is always beyond
+    # ``length`` so attention never reads it.
+    W = kc.shape[1] - 1
+    slot = pos % W
+    act = active if active is not None else jnp.ones((B,), bool)
+    slot = jnp.where(act, slot, W)
+    quant = cfg.kv_cache_dtype == "int8" and kk == "k"
+
+    def upd(c, xnew, s):
+        return jax.lax.dynamic_update_slice(
+            c, xnew[None], (s,) + (0,) * (c.ndim - 1)
+        )
+
+    updates = {}
+    if quant:
+        k8, ks = L.quantize_kv_int8(k)
+        v8, vs = L.quantize_kv_int8(v)
+        kc = jax.vmap(upd)(kc, k8, slot)
+        vc = jax.vmap(upd)(vc, v8, slot)
+        ksc = jax.vmap(upd)(cache_l["k_scale"], ks, slot)
+        vsc = jax.vmap(upd)(cache_l["v_scale"], vs, slot)
+        updates.update(k_scale=ksc, v_scale=vsc)
+        k_scale_r, v_scale_r = ksc, vsc
+    else:
+        kc = jax.vmap(upd)(kc, k, slot)
+        vc = jax.vmap(upd)(vc, v, slot)
+        k_scale_r = v_scale_r = None
+    updates[kk] = kc
+    updates[vk] = vc
+    length = jnp.minimum(pos + 1, W)
+    o = L.decode_attention_jnp(q, kc, vc, length, k_scale_r, v_scale_r)
+    return L.linear(p["wo"], o.reshape(B, H * hd)), updates
+
+
+def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
+    fam = cfg.family
+    new_cache = dict(cache_l)
+    if fam == "ssm":
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        o, new_cache["mamba"] = S.mamba2_decode_step(
+            lp["mamba"], h, cache_l["mamba"], cfg, active
+        )
+        return x + o, new_cache
+    if fam == "audio":
+        h = L.layernorm(lp["ln1"], x, cfg.norm_eps)
+        a, upd = _attn_decode(lp["attn"], h, cache_l, pos, cfg, 0, active)
+        new_cache.update(upd)
+        x = x + a
+        hx = L.layernorm(lp["lnx"], x, cfg.norm_eps)
+        B = x.shape[0]
+        q = L.linear(lp["xattn"]["wq"], hx).reshape(B, cfg.num_heads, cfg.head_dim)
+        xo = L.decode_attention_jnp(
+            q, cache_l["xk"], cache_l["xv"],
+            jnp.full((B,), cache_l["xk"].shape[1], jnp.int32),
+        )
+        x = x + L.linear(lp["xattn"]["wo"], xo.reshape(B, -1))
+        h2 = L.layernorm(lp["ln2"], x, cfg.norm_eps)
+        return x + L.gelu_mlp(lp["mlp"], h2), new_cache
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if fam == "hybrid":
+        a, upd = _attn_decode(
+            lp["attn"], h, cache_l, pos, cfg, cfg.sliding_window, active
+        )
+        new_cache.update(upd)
+        m, new_cache["mamba"] = S.mamba2_decode_step(
+            lp["mamba"], h, cache_l["mamba"], cfg, active
+        )
+        mix = (
+            L.rmsnorm(lp["norm_a"], a, cfg.norm_eps).astype(jnp.float32)
+            + L.rmsnorm(lp["norm_m"], m, cfg.norm_eps).astype(jnp.float32)
+        ) * 0.5
+        x = x + mix.astype(x.dtype)
+    else:
+        a, upd = _attn_decode(lp["attn"], h, cache_l, pos, cfg, 0, active)
+        new_cache.update(upd)
+        x = x + a
+    h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if fam == "moe":
+        # decode uses dense-mode routing (few tokens; no capacity dispatch)
+        y = L.moe_dense(lp["moe"], h2[:, None, :], cfg)[:, 0]
+        return x + y, new_cache
+    return x + L.swiglu(lp["mlp"], h2), new_cache
+
+
+def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None):
+    """tokens: (B,) int32 newest tokens; pos: () or (B,) absolute positions
+    (per-slot for continuous batching); active: optional (B,) write mask.
+
+    Returns (logits (B, padded_vocab) f32, new cache).
+    """
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = L.embed(params["embed"], tokens)               # (B, d)
+
+    def step(carry, xs):
+        h = carry
+        lp, cl = xs
+        h2, ncl = _layer_decode(lp, cl, h, pos, cfg, active)
+        return h2, ncl
+
+    x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))
+    if cfg.family == "audio":
+        x = L.layernorm(params["ln_f"], x, cfg.norm_eps)
+    else:
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill_cross_attention(params: Params, frames, cfg, batch: int):
+    """Whisper: run the encoder and precompute per-layer cross K/V."""
+    enc = encode_audio(params, frames, cfg)            # (B, Se, d)
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def per_layer(lp, _):
+        k = L._split_heads(L.linear(lp["xattn"]["wk"], enc), Hkv, hd)
+        v = L._split_heads(L.linear(lp["xattn"]["wv"], enc), Hkv, hd)
+        return _, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(per_layer, None, params["layers"])
+    return ks.astype(cfg.jax_dtype), vs.astype(cfg.jax_dtype)

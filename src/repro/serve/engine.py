@@ -1,0 +1,114 @@
+"""Batched serving engine: prefill + decode with KV/SSM caches and
+continuous slot-based batching.
+
+The engine keeps a fixed pool of batch slots.  A request claims a free
+slot, is prefilled (token-by-token through the shared batched decode step
+with a write mask so other slots are untouched), then every ``tick`` runs
+ONE batched decode step for the whole pool with per-slot positions.  New
+requests join between ticks — continuous batching without recompilation
+(pool size and max_len are static).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, pool_size: int = 4, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool_size
+        self.max_len = max_len
+        self.cache = init_cache(cfg, pool_size, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * pool_size
+        self.slot_pos = np.zeros(pool_size, np.int32)
+        self.slot_remaining = np.zeros(pool_size, np.int32)
+        self.slot_last = np.zeros(pool_size, np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, act)
+        )
+        self.ticks = 0
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is not None]
+
+    # ------------------------------------------------------------ admit
+    def admit(self, req: Request) -> bool:
+        for s in range(self.pool):
+            if self.slot_req[s] is None:
+                self.slot_req[s] = req
+                req.out_tokens = []
+                self._prefill(s, req)
+                return True
+        return False
+
+    def _prefill(self, slot: int, req: Request):
+        toks = req.prompt.astype(np.int32)
+        active = np.zeros(self.pool, bool)
+        active[slot] = True
+        logits = None
+        for i, t in enumerate(toks):
+            tok_vec = np.zeros(self.pool, np.int32)
+            tok_vec[slot] = t
+            pos = self.slot_pos.copy()
+            pos[slot] = i
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tok_vec),
+                jnp.asarray(pos), jnp.asarray(active),
+            )
+        self.slot_pos[slot] = len(toks)
+        self.slot_remaining[slot] = req.max_new_tokens
+        nxt = int(np.argmax(np.asarray(logits)[slot, : self.cfg.vocab_size]))
+        req.out_tokens.append(nxt)
+        self.slot_last[slot] = nxt
+        self.slot_remaining[slot] -= 1
+        if self.slot_remaining[slot] <= 0:
+            req.done = True
+            self.slot_req[slot] = None
+
+    # ------------------------------------------------------------- tick
+    def tick(self):
+        """One batched decode step for all active slots (per-slot pos)."""
+        active = np.array([r is not None for r in self.slot_req])
+        if not active.any():
+            return
+        toks = self.slot_last.copy()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.slot_pos), jnp.asarray(active),
+        )
+        arr = np.asarray(logits)
+        for s in np.nonzero(active)[0]:
+            r = self.slot_req[s]
+            nxt = int(np.argmax(arr[s, : self.cfg.vocab_size]))
+            r.out_tokens.append(nxt)
+            self.slot_last[s] = nxt
+            self.slot_pos[s] += 1
+            self.slot_remaining[s] -= 1
+            if self.slot_remaining[s] <= 0 or self.slot_pos[s] >= self.max_len - 1:
+                r.done = True
+                self.slot_req[s] = None
+        self.ticks += 1
+
+    def run_until_done(self, max_ticks: int = 2000):
+        t = 0
+        while any(r is not None for r in self.slot_req) and t < max_ticks:
+            self.tick()
+            t += 1

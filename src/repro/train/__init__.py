@@ -1,0 +1,10 @@
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_init_specs, adamw_update, lr_at
+from .trainer import (
+    FailureInjector,
+    StragglerWatchdog,
+    Trainer,
+    TrainerConfig,
+    cross_entropy,
+    make_loss_fn,
+    make_train_step,
+)

@@ -1,0 +1,79 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick for the 1000+-node posture).
+
+Two composable transforms:
+
+  * bf16 reduction — cast grads to bf16 before the all-reduce, accumulate
+    back in f32 (2x DCN bytes saved; the standard cross-pod trick).
+  * int8 error-feedback — per-tensor symmetric int8 quantization with a
+    residual carried to the next step (1-bit-Adam-style EF), 4x bytes saved;
+    the residual guarantees the quantization error is compensated, which the
+    convergence test in tests/test_train.py verifies on a quadratic.
+
+On the wire these wrap the gradient pytree right before ``psum``; under pjit
+the cast itself shrinks the all-reduce payload (GSPMD reduces in the cast
+dtype).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any            # f32 pytree like grads
+
+
+def ef_init(params) -> EFState:
+    return EFState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_ef(grads, state: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized pytree of (q, scale), dequantized grads for the
+    local update path, new EF state)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quantize_int8(x)
+        deq = _dequantize_int8(q, s)
+        return (q, s), deq, x - deq
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    wire = jax.tree.unflatten(td, [o[0] for o in outs])
+    deq = jax.tree.unflatten(td, [o[1] for o in outs])
+    new_res = jax.tree.unflatten(td, [o[2] for o in outs])
+    return wire, deq, EFState(new_res)
+
+
+def bf16_compress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def bf16_decompress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def wire_bytes(tree) -> int:
+    import numpy as np
+
+    total = 0
+    for l in jax.tree.leaves(tree):
+        if hasattr(l, "shape"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total

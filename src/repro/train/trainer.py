@@ -1,0 +1,222 @@
+"""Loss, train-step builder (with microbatch gradient accumulation via scan),
+and the fault-tolerant training driver.
+
+``make_train_step`` returns a pure jittable function over GLOBAL logical
+shapes — pjit shards it by the in/out shardings from
+``repro.distributed.sharding``.  The driver (``Trainer``) adds
+checkpointing/auto-resume, the straggler watchdog, and failure injection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models import layers as L
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def cross_entropy_sums(logits: jax.Array, labels: jax.Array, vocab_size: int):
+    """logits (..., Vp) f32; labels (...) int32 (-1 = ignore).
+    Returns (sum nll, count).  Vocab padding columns are masked out."""
+    Vp = logits.shape[-1]
+    col = jnp.arange(Vp)
+    mask_cols = col < vocab_size
+    logits = jnp.where(mask_cols, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1)) + m[..., 0]
+    lbl = jnp.clip(labels, 0, Vp - 1)
+    picked = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int):
+    total, denom = cross_entropy_sums(logits, labels, vocab_size)
+    return total / jnp.maximum(denom, 1.0)
+
+
+def _chunk_len(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def make_loss_fn(cfg):
+    """Chunked vocab-parallel CE: the (B, S, Vp) logits tensor is never
+    materialized — the unembed matmul + CE run per sequence chunk inside a
+    scan (the peak is (B, chunk, Vp/model-shards) per device)."""
+
+    def loss_fn(params, batch):
+        hidden = forward(params, batch, cfg, return_hidden=True)  # (B, S, d)
+        labels = batch["labels"]
+        B, S, d = hidden.shape
+        c = _chunk_len(S, cfg.loss_chunk)
+        nc = S // c
+        if nc <= 1:
+            logits = L.unembed(params["embed"], hidden).astype(jnp.float32)
+            return cross_entropy(logits, labels, cfg.vocab_size)
+        h = jnp.moveaxis(hidden.reshape(B, nc, c, d), 1, 0)       # (nc,B,c,d)
+        l = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+
+        def step(carry, xs):
+            tot, cnt = carry
+            hc, lc = xs
+            logits = L.unembed(params["embed"], hc).astype(jnp.float32)
+            t, n = cross_entropy_sums(logits, lc, cfg.vocab_size)
+            return (tot + t, cnt + n), None
+
+        (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), (h, l))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig,
+    accum_steps: int = 1,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``accum_steps > 1`` the global batch is split on the leading axis
+    and gradients accumulate through a ``lax.scan`` — constant HLO size and
+    donated accumulators (XLA overlaps each microbatch's reduce-scatter with
+    the next microbatch's backward under GSPMD).
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ======================================================================
+# fault-tolerant driver
+# ======================================================================
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    straggler_threshold: float = 3.0     # x median step time
+
+
+class StragglerWatchdog:
+    """EMA step-time monitor; flags steps slower than k x the running
+    median.  On a real fleet the flag triggers backup-task dispatch; here it
+    feeds the trainer's metrics and the fault-tolerance tests."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 50):
+        self.threshold = threshold
+        self.times: list = []
+        self.window = window
+        self.flagged: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        import statistics
+
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5:
+            med = statistics.median(self.times)
+            if dt > self.threshold * med:
+                self.flagged.append((step, dt, med))
+                return True
+        return False
+
+
+class FailureInjector:
+    """Deterministic failure injection for restart tests."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,
+        opt_cfg: AdamWConfig,
+        tcfg: TrainerConfig,
+        data_iter_factory: Callable[[int], Any],
+        checkpoint_manager=None,
+        train_step: Optional[Callable] = None,
+        failure_injector: Optional[FailureInjector] = None,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data_iter_factory = data_iter_factory
+        self.ckpt = checkpoint_manager
+        self.train_step = train_step or jax.jit(
+            make_train_step(cfg, opt_cfg), donate_argnums=(0, 1)
+        )
+        self.watchdog = StragglerWatchdog(tcfg.straggler_threshold)
+        self.injector = failure_injector
+        self.history: list = []
+
+    def run(self, params, opt_state=None, start_step: int = 0):
+        opt_state = opt_state if opt_state is not None else adamw_init(params)
+        step = start_step
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest(params, opt_state)
+            if restored is not None:
+                params, opt_state, step = restored
+        data = self.data_iter_factory(step)
+        while step < self.tcfg.total_steps:
+            if self.injector is not None:
+                self.injector.maybe_fail(step)
+            batch = next(data)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            slow = self.watchdog.observe(step, dt)
+            self.history.append({"step": step, "loss": loss, "dt": dt, "straggler": slow})
+            step += 1
+            if self.ckpt is not None and step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(step, params, opt_state)
+        if self.ckpt is not None:
+            self.ckpt.save(step, params, opt_state)
+        return params, opt_state, step

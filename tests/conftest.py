@@ -1,0 +1,33 @@
+import numpy as np
+import pytest
+
+import jax
+
+# Tests and benches must see ONE CPU device (the dry-run sets its own 512-way
+# host platform count in its process, never here).
+jax.config.update("jax_platform_name", "cpu")
+
+
+def compile_and_compare(module, feeds, rtol=2e-5, atol=2e-5, **opt_kwargs):
+    """Compile a StitchIR module and assert stitched == reference."""
+    from repro.core import StitchOptions, compile_module, reference_execute
+
+    opts = StitchOptions(max_blocks=opt_kwargs.pop("max_blocks", 32), **opt_kwargs)
+    compiled = compile_module(module, opts)
+    ref = reference_execute(module, feeds)
+    out = compiled(feeds)
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out[k], dtype=np.float64),
+            np.asarray(ref[k], dtype=np.float64),
+            rtol=rtol,
+            atol=atol,
+            err_msg=f"root {k} diverged",
+        )
+    return compiled
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,143 @@
+"""Deep fusion algorithm (paper §3.2, Algorithm 1) structural tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FusionConfig,
+    GraphBuilder,
+    deep_fuse,
+    trace,
+    xla_baseline_kernel_count,
+)
+
+
+def _softmax_dot_module():
+    def f(b, scores, v):
+        p = b.softmax(scores, dim=-1)
+        return b.dot(p, v, fusable=True)
+
+    return trace(
+        f, ("scores", (2, 4, 8, 8), jnp.float32), ("v", (2, 4, 8, 4), jnp.float32)
+    )
+
+
+def test_exclusive_membership_and_coverage():
+    m = _softmax_dot_module()
+    plan = deep_fuse(m)
+    seen = set()
+    for f in plan.fusions:
+        for mem in f.members:
+            assert mem.id not in seen, "instruction fused twice"
+            seen.add(mem.id)
+    for s in plan.standalone:
+        assert s.id not in seen
+        seen.add(s.id)
+    uncovered = [
+        i
+        for i in m.instructions
+        if i.id not in seen and i.opcode not in ("parameter", "constant")
+    ]
+    assert not uncovered
+
+
+def test_members_topologically_ordered():
+    m = _softmax_dot_module()
+    plan = deep_fuse(m)
+    pos = {i.id: k for k, i in enumerate(m.instructions)}
+    for f in plan.fusions:
+        order = [pos[mem.id] for mem in f.members]
+        assert order == sorted(order)
+        for mem in f.members:
+            for op in mem.operands:
+                if op in f:
+                    assert pos[op.id] < pos[mem.id]
+
+
+def test_fusable_dot_is_stitched_but_library_dot_is_not():
+    m = _softmax_dot_module()
+    plan = deep_fuse(m, FusionConfig(fuse_dot=True))
+    fused_ops = {mem.opcode for f in plan.fusions for mem in f.members}
+    assert "dot" in fused_ops
+    # same graph, user says no dot fusion
+    plan2 = deep_fuse(m, FusionConfig(fuse_dot=False))
+    fused_ops2 = {mem.opcode for f in plan2.fusions for mem in f.members}
+    assert "dot" not in fused_ops2
+    assert plan2.num_library_calls == 0  # fusable-attr dot is standalone, not LC
+
+
+def test_fusion_never_crosses_library_call():
+    def f(b, x, w1, w2):
+        h = b.tanh(b.dot(x, w1))         # library dot
+        return b.sigmoid(b.dot(h, w2))   # library dot
+
+    m = trace(
+        f,
+        ("x", (4, 8), jnp.float32),
+        ("w1", (8, 8), jnp.float32),
+        ("w2", (8, 8), jnp.float32),
+    )
+    plan = deep_fuse(m)
+    assert plan.num_library_calls == 2
+    for fu in plan.fusions:
+        assert all(mem.opcode != "dot" for mem in fu.members)
+        # tanh and sigmoid sit on opposite sides of an LC layer
+        names = {mem.attrs.get("fn") for mem in fu.members}
+        assert not ({"tanh", "sigmoid"} <= names)
+
+
+def test_elementwise_horizontal_fusion_groups_independent_ops():
+    """The weight-accumulation pattern: N independent same-shape updates."""
+    b = GraphBuilder()
+    outs = []
+    for i in range(6):
+        w = b.parameter(f"w{i}", (8, 8), jnp.float32)
+        g = b.parameter(f"g{i}", (8, 8), jnp.float32)
+        outs.append(w - g * 0.1)
+    m = b.module
+    plan = deep_fuse(m)
+    # all six updates (plus their scalar mul chains) should land in ONE kernel
+    assert len(plan.fusions) == 1
+    assert len(plan.fusions[0].roots) == 6
+
+
+def test_footprint_threshold_splits_horizontal_groups():
+    b = GraphBuilder()
+    for i in range(4):
+        w = b.parameter(f"w{i}", (32, 32), jnp.float32)
+        g = b.parameter(f"g{i}", (32, 32), jnp.float32)
+        _ = w + g
+    cfg = FusionConfig(ew_footprint_limit=3 * 32 * 32 * 4 * 2)  # fits ~2 adds
+    plan = deep_fuse(b.module, cfg)
+    assert len(plan.fusions) >= 2
+
+
+def test_giveup_blocks_cyclic_fusion():
+    """A producer whose consistency fails poisons its transitive producers."""
+    def f(b, x):
+        e = b.exp(x)
+        r = b.reduce(e, (1,), "sum")          # (4,)
+        return b.broadcast(r, (4, 8), (0,)) + e
+
+    m = trace(f, ("x", (4, 8), jnp.float32))
+    rejected = []
+
+    def consistency(roots, members):
+        # refuse any fusion containing the reduce
+        bad = any(mem.opcode == "reduce" for mem in members)
+        if bad:
+            rejected.append(members)
+        return not bad
+
+    plan = deep_fuse(m, FusionConfig(consistency=consistency))
+    assert rejected, "checker was consulted"
+    for fu in plan.fusions:
+        assert all(mem.opcode != "reduce" for mem in fu.members)
+    # the reduce runs standalone
+    assert any(s.opcode == "reduce" for s in plan.standalone)
+
+
+def test_fusion_reduces_kernel_count_vs_xla_baseline():
+    m = _softmax_dot_module()
+    plan = deep_fuse(m)
+    assert plan.num_kernels < xla_baseline_kernel_count(m)

@@ -1,0 +1,183 @@
+"""Schedule spec + Table-1 propagation rules (paper §4.1/§4.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GraphBuilder,
+    REPLICATED,
+    Sched,
+    Unsatisfiable,
+    blocks_of,
+    candidate_schedules,
+    chunk_shape,
+    propagate,
+    resolve_schedules,
+)
+from repro.core.schedule import ROW, COLUMN, block_index
+
+
+# ---------------------------------------------------------------- blocks math
+def test_blocks_and_chunks_row():
+    s = Sched("chunked", 1, 2, ROW)
+    assert blocks_of((4, 6, 8), s) == 4 * 2
+    assert chunk_shape((4, 6, 8), s) == (1, 3, 8)
+
+
+def test_blocks_and_chunks_column():
+    s = Sched("chunked", 1, 3, COLUMN)
+    assert blocks_of((4, 6, 8), s) == 3 * 8
+    assert chunk_shape((4, 6, 8), s) == (4, 2, 1)
+
+
+@given(
+    st.lists(st.integers(1, 6), min_size=1, max_size=4),
+    st.data(),
+)
+@settings(max_examples=80, deadline=None)
+def test_block_index_covers_workspace(dims, data):
+    """Property: the blocks×chunk grid tiles the whole output space exactly."""
+    shape = tuple(dims)
+    cands = candidate_schedules(shape, max_blocks=1 << 12)
+    sched = data.draw(st.sampled_from(cands))
+    if sched.kind != "chunked":
+        return
+    blocks = blocks_of(shape, sched)
+    cs = chunk_shape(shape, sched)
+    seen = np.zeros(shape, dtype=int)
+    for b in range(blocks):
+        idx = block_index(shape, sched, b)
+        sl = tuple(
+            slice(i * c, (i + 1) * c) for i, c in zip(idx, cs)
+        )
+        seen[sl] += 1
+    assert (seen == 1).all(), f"{sched} does not tile {shape}"
+
+
+# ---------------------------------------------------------------- propagation
+def _instr(builder_fn):
+    b = GraphBuilder()
+    return builder_fn(b).instr
+
+
+def test_elementwise_passes_row_and_column():
+    i = _instr(lambda b: b.exp(b.parameter("x", (4, 8), jnp.float32)))
+    for t in (ROW, COLUMN):
+        s = Sched("chunked", 0, 2, t)
+        assert propagate(i, s) == [s]
+
+
+def test_reduce_row_requires_split_left_of_reduce_dims():
+    i = _instr(
+        lambda b: b.reduce(b.parameter("x", (4, 6, 8), jnp.float32), (2,), "sum")
+    )
+    # output (4,6); split on dim 0 -> input split 0 < reduce dim 2: Row OK
+    (got,) = propagate(i, Sched("chunked", 0, 4, ROW))
+    assert got == Sched("chunked", 0, 4, ROW)
+    # Column with split left of the reduce dims is rejected
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 0, 4, COLUMN))
+
+
+def test_reduce_column_requires_split_right_of_reduce_dims():
+    i = _instr(
+        lambda b: b.reduce(b.parameter("x", (4, 6, 8), jnp.float32), (0,), "sum")
+    )
+    # output (6,8); out dim 1 -> input dim 2 > reduce dim 0: Column OK
+    (got,) = propagate(i, Sched("chunked", 1, 2, COLUMN))
+    assert got == Sched("chunked", 2, 2, COLUMN)
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 1, 2, ROW))
+
+
+def test_transpose_rules():
+    i = _instr(
+        lambda b: b.transpose(b.parameter("x", (4, 6, 8), jnp.float32), (0, 2, 1))
+    )
+    # moved dims = {1,2}; split 0 < 1 -> Row passes unchanged
+    (got,) = propagate(i, Sched("chunked", 0, 2, ROW))
+    assert got == Sched("chunked", 0, 2, ROW)
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 1, 2, ROW))
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 1, 2, COLUMN))
+
+
+def test_dot_requires_batch_split():
+    i = _instr(
+        lambda b: b.dot(
+            b.parameter("l", (4, 8, 16), jnp.float32),
+            b.parameter("r", (4, 16, 8), jnp.float32),
+            fusable=True,
+        )
+    )
+    got = propagate(i, Sched("chunked", 0, 2, ROW))
+    assert got == [Sched("chunked", 0, 2, ROW)] * 2
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 1, 2, ROW))  # M dim is not a batch dim
+
+
+def test_reshape_row_remaps_contiguous_runs():
+    i = _instr(
+        lambda b: b.reshape(b.parameter("x", (4, 6, 8), jnp.float32), (24, 8))
+    )
+    # out (24,8) split 0 sword 4 -> run = 6*8 elements = input (s=0, sword=4)?
+    # run=48 -> input suffix(1)=48 -> c=1, s'=0, w'=4
+    (got,) = propagate(i, Sched("chunked", 0, 4, ROW))
+    assert got.sched_type == ROW and blocks_of((4, 6, 8), got) == 4
+
+
+def test_broadcast_maps_or_replicates():
+    i = _instr(
+        lambda b: b.broadcast(
+            b.parameter("x", (6,), jnp.float32), (4, 6, 8), (1,)
+        )
+    )
+    (got,) = propagate(i, Sched("chunked", 1, 2, ROW))
+    assert got == Sched("chunked", 0, 2, ROW)       # split maps to operand dim
+    (got,) = propagate(i, Sched("chunked", 0, 2, ROW))
+    assert got == REPLICATED                        # split not in dims
+
+
+def test_concat_rules():
+    i = _instr(
+        lambda b: b.concat(
+            [b.parameter("a", (4, 3), jnp.float32), b.parameter("b", (4, 5), jnp.float32)],
+            dim=1,
+        )
+    )
+    got = propagate(i, Sched("chunked", 0, 4, ROW))
+    assert len(got) == 2 and all(g.sched_type == ROW for g in got)
+    with pytest.raises(Unsatisfiable):
+        propagate(i, Sched("chunked", 1, 2, ROW))
+
+
+# ------------------------------------------------------------- resolution
+def test_softmax_resolution_all_chunked_on_batch_split():
+    b = GraphBuilder()
+    x = b.parameter("x", (4, 8, 16), jnp.float32)
+    y = b.softmax(x, dim=-1)
+    m = b.module
+    members = [i for i in m.instructions if i.opcode != "parameter"]
+    roots = [y.instr]
+    sol = resolve_schedules(members, roots, {y.instr.id: Sched("chunked", 0, 4, ROW)})
+    assert sol.blocks == 4
+    # every member aligns with the launch grid (no forced replication)
+    for mem in members:
+        assert sol.sched(mem).kind == "chunked", mem
+
+
+def test_resolution_rejects_oversized_replication():
+    b = GraphBuilder()
+    x = b.parameter("x", (512, 1024), jnp.float32)   # 2 MiB
+    s = b.reduce(x, (0,), "sum")                     # (1024,)
+    y = b.broadcast(s, (512, 1024), (1,)) * x
+    m = b.module
+    members = [i for i in m.instructions if i.opcode != "parameter"]
+    # split on dim 0: the column-reduce input would need full replication of x
+    with pytest.raises(Unsatisfiable):
+        resolve_schedules(
+            members, [y.instr], {y.instr.id: Sched("chunked", 0, 512, ROW)},
+            replicate_limit=64 * 1024,
+        )

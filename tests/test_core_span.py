@@ -1,0 +1,79 @@
+"""Work/Span analysis properties (paper §3.1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBuilder, compute_spans, critical_path_length, layers
+from repro.core.span import lc_spans, roof_for, validate_spans
+
+
+def _chain(n):
+    b = GraphBuilder()
+    x = b.parameter("x", (4, 4), jnp.float32)
+    for _ in range(n):
+        x = b.exp(x)
+    return b.module
+
+
+def test_chain_span_equals_length():
+    m = _chain(5)
+    assert critical_path_length(m) == 5  # param at span 5, root exp at 0
+
+
+def test_roots_have_span_zero():
+    m = _chain(3)
+    span = compute_spans(m)
+    for r in m.roots:
+        assert span[r.id] == 0
+
+
+def test_same_layer_independent():
+    b = GraphBuilder()
+    x = b.parameter("x", (4,), jnp.float32)
+    a, c = b.exp(x), b.tanh(x)
+    _ = a + c
+    span = compute_spans(b.module)
+    assert span[a.instr.id] == span[c.instr.id] == 1
+    validate_spans(b.module, span)
+
+
+def test_lc_layer_segmentation():
+    b = GraphBuilder()
+    x = b.parameter("x", (4, 4), jnp.float32)
+    y = b.exp(x)
+    d = b.dot(y, y)            # library call
+    z = b.tanh(d)
+    _ = b.reduce(z, (1,), "sum")
+    span = compute_spans(b.module)
+    lcs = lc_spans(b.module, span)
+    assert lcs == [span[d.instr.id]]
+    # fusion from span 0 may not cross the dot
+    assert roof_for(0, lcs, max(span.values())) == span[d.instr.id]
+
+
+@st.composite
+def random_dag(draw):
+    b = GraphBuilder()
+    vals = [b.parameter("x", (4, 4), jnp.float32)]
+    n = draw(st.integers(2, 18))
+    for i in range(n):
+        kind = draw(st.sampled_from(["exp", "add", "mul", "tanh"]))
+        if kind in ("add", "mul"):
+            lhs = vals[draw(st.integers(0, len(vals) - 1))]
+            rhs = vals[draw(st.integers(0, len(vals) - 1))]
+            vals.append(b.binary(kind, lhs, rhs))
+        else:
+            vals.append(b.unary(kind, vals[draw(st.integers(0, len(vals) - 1))]))
+    return b.module
+
+
+@given(random_dag())
+@settings(max_examples=60, deadline=None)
+def test_span_invariants_on_random_dags(module):
+    span = compute_spans(module)
+    validate_spans(module, span)          # operands strictly deeper than users
+    ls = layers(module, span)
+    # layers partition the instruction set
+    assert sum(len(v) for v in ls.values()) == len(module.instructions)
+    # span values are contiguous from 0
+    assert sorted(ls) == list(range(max(ls) + 1))

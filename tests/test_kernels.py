@@ -1,0 +1,140 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (
+    attention_ref,
+    decode_attention_ref,
+    moe_gate_ref,
+    rmsnorm_ref,
+    softmax_ref,
+)
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.randn(*shape), dtype=dtype)
+
+
+# ------------------------------------------------------------------ softmax
+@pytest.mark.parametrize("shape", [(8, 16), (4, 8, 32), (2, 3, 5, 64), (16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_softmax_sweep(rng, shape, dtype):
+    x = _rand(rng, shape, dtype)
+    got = ops.softmax(x)
+    want = softmax_ref(x)
+    assert got.dtype == x.dtype and got.shape == x.shape
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 4, 8])
+def test_softmax_block_sweep(rng, block_rows):
+    x = _rand(rng, (8, 24), jnp.float32)
+    got = ops.softmax(x, block_rows=block_rows)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(softmax_ref(x)), rtol=2e-5, atol=2e-5
+    )
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape", [(4, 32), (2, 8, 64), (3, 5, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rng, shape, dtype):
+    x = _rand(rng, shape, dtype)
+    g = _rand(rng, shape[-1:], dtype)
+    got = ops.rmsnorm(x, g)
+    want = rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64), **TOL[dtype]
+    )
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D", [(1, 2, 2, 16, 8), (2, 4, 2, 32, 16), (1, 8, 1, 16, 8)]
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, B, Hq, Hkv, S, D, causal):
+    q = _rand(rng, (B, Hq, S, D), jnp.float32)
+    k = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    v = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    got = ops.attention(q, k, v, causal=causal, block_q=8, block_k=8)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_flash_attention_bf16(rng):
+    q = _rand(rng, (1, 2, 16, 8), jnp.bfloat16)
+    k = _rand(rng, (1, 2, 16, 8), jnp.bfloat16)
+    v = _rand(rng, (1, 2, 16, 8), jnp.bfloat16)
+    got = ops.attention(q, k, v, causal=True, block_q=8, block_k=8)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_flash_attention_blocks_equivalent(rng):
+    q = _rand(rng, (1, 2, 32, 8), jnp.float32)
+    k = _rand(rng, (1, 2, 32, 8), jnp.float32)
+    v = _rand(rng, (1, 2, 32, 8), jnp.float32)
+    a = ops.attention(q, k, v, block_q=8, block_k=16)
+    b = ops.attention(q, k, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D", [(2, 4, 2, 32, 8), (1, 8, 1, 64, 16), (3, 2, 2, 16, 8)]
+)
+def test_decode_attention_sweep(rng, B, Hq, Hkv, S, D):
+    q = _rand(rng, (B, Hq, D), jnp.float32)
+    k = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    v = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    lengths = jnp.asarray(rng.randint(1, S + 1, size=(B,)), jnp.int32)
+    got = ops.attention_decode(q, k, v, lengths, block_k=8)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_matches_prefill_last_token(rng):
+    """decode(q_last, cache) == causal prefill's last row — the serve-path
+    consistency invariant."""
+    B, H, S, D = 1, 2, 16, 8
+    q = _rand(rng, (B, H, S, D), jnp.float32)
+    k = _rand(rng, (B, H, S, D), jnp.float32)
+    v = _rand(rng, (B, H, S, D), jnp.float32)
+    full = ops.attention(q, k, v, causal=True, block_q=8, block_k=8)
+    dec = ops.attention_decode(
+        q[:, :, -1], k, v, jnp.full((B,), S, jnp.int32), block_k=8
+    )
+    np.testing.assert_allclose(
+        np.asarray(full[:, :, -1]), np.asarray(dec), rtol=2e-4, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------- moe gate
+@pytest.mark.parametrize("T,E,k", [(16, 8, 2), (32, 40, 8), (8, 16, 1), (64, 64, 4)])
+def test_moe_gate_sweep(rng, T, E, k):
+    logits = _rand(rng, (T, E), jnp.float32)
+    w, i = ops.moe_gate(logits, top_k=k, block_tokens=8)
+    w_ref, i_ref = moe_gate_ref(logits, k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_moe_gate_bf16_logits(rng):
+    logits = _rand(rng, (16, 8), jnp.bfloat16)
+    w, i = ops.moe_gate(logits.astype(jnp.float32), top_k=2, block_tokens=8)
+    assert w.dtype == jnp.float32 and i.dtype == jnp.int32

@@ -1,0 +1,132 @@
+"""Optimizer, schedules, loss, gradient accumulation, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.train import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cross_entropy,
+    lr_at,
+    make_train_step,
+)
+from repro.train.compression import (
+    EFState,
+    bf16_compress,
+    compress_int8_ef,
+    ef_init,
+    wire_bytes,
+)
+from repro.train.optimizer import clip_by_global_norm, global_norm
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=110, schedule="cosine")
+    assert float(lr_at(cfg, 0)) < 1e-3 * 0.2          # warmup ramp
+    assert abs(float(lr_at(cfg, 10)) - 1e-3) < 1e-6   # peak at warmup end
+    assert float(lr_at(cfg, 110)) <= 1e-3 * cfg.min_lr_ratio + 1e-9
+
+
+def test_adamw_converges_quadratic():
+    """AdamW drives a quadratic to its minimum — optimizer correctness."""
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3, 1))}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1, total_steps=500,
+                      schedule="constant")
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"][:, 0] - target) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_cross_entropy_masks_padded_vocab_and_labels():
+    logits = jnp.zeros((1, 3, 8), jnp.float32)
+    labels = jnp.asarray([[1, 2, -1]], jnp.int32)     # last position ignored
+    l = cross_entropy(logits, labels, vocab_size=5)   # cols 5..7 padded out
+    assert abs(float(l) - np.log(5)) < 1e-5           # uniform over 5 classes
+
+
+def test_loss_decreases_on_tiny_model():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, 0)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60, schedule="constant")
+    ))
+    data = SyntheticLM(cfg, seq_len=32, global_batch=8, seed=0)
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::8]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, 0)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step1 = jax.jit(make_train_step(cfg, ocfg, accum_steps=1))
+    step4 = jax.jit(make_train_step(cfg, ocfg, accum_steps=4))
+    data = SyntheticLM(cfg, seq_len=16, global_batch=8, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    p1, _, m1 = step1(params, adamw_init(params), batch)
+    p4, _, m4 = step4(params, adamw_init(params), batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-3, atol=2e-4,
+        )
+
+
+# -------------------------------------------------------- compression
+def test_int8_ef_roundtrip_reasonable():
+    rng = np.random.RandomState(0)
+    g = {"w": jnp.asarray(rng.randn(64, 64).astype("f4"))}
+    st = ef_init(g)
+    wire, deq, st2 = compress_int8_ef(g, st)
+    q, scale = wire["w"]
+    assert q.dtype == jnp.int8
+    rel = float(jnp.linalg.norm(deq["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.02
+    # wire payload is ~4x smaller
+    assert wire_bytes({"w": q}) * 4 == wire_bytes(g)
+
+
+def test_error_feedback_compensates_bias():
+    """With EF, repeated quantized steps track the true gradient sum —
+    residual accumulation cancels systematic quantization error."""
+    rng = np.random.RandomState(0)
+    true_sum = np.zeros(32, np.float32)
+    applied = np.zeros(32, np.float32)
+    st = ef_init({"w": jnp.zeros(32)})
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.randn(32).astype("f4") * 0.1)}
+        true_sum += np.asarray(g["w"])
+        _, deq, st = compress_int8_ef(g, st)
+        applied += np.asarray(deq["w"])
+    resid = np.asarray(st.residual["w"])
+    np.testing.assert_allclose(applied + resid, true_sum, rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_compress_halves_bytes():
+    g = {"w": jnp.zeros((128, 128), jnp.float32)}
+    assert wire_bytes(bf16_compress(g)) * 2 == wire_bytes(g)
