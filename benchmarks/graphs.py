@@ -150,6 +150,24 @@ def nmt_graph(fuse_dot: bool = True) -> Module:
     return b.module
 
 
+def stacked_transformer_graph(num_layers: int = 8) -> Module:
+    """N structurally-identical pre-norm transformer-ish blocks separated by
+    library MatMuls — the repeated-layer serving workload the kernel cache
+    targets: every middle layer's fusion has the same fusion signature."""
+    b = GraphBuilder("Stacked")
+    B, D = 16, 64
+    x = b.parameter("x", (B, D), jnp.float32)
+    for l in range(num_layers):
+        g = b.parameter(f"g{l}", (D,), jnp.float32)
+        W = b.parameter(f"W{l}", (D, D), jnp.float32)
+        ms = b.reduce(b.square(x), (1,), "mean")
+        inv = b.rsqrt(ms + 1e-6)
+        normed = x * b.broadcast(inv, (B, D), (0,)) * b.broadcast(g, (B, D), (1,))
+        h = b.dot(normed, W)                           # LC: layer boundary
+        x = x + b.silu(h)
+    return b.module
+
+
 ALL_GRAPHS = {
     "LR": lr_graph,
     "W2V": w2v_graph,
@@ -157,4 +175,5 @@ ALL_GRAPHS = {
     "BiRNN": birnn_graph,
     "Speech": speech_graph,
     "NMT": nmt_graph,
+    "Stacked": stacked_transformer_graph,
 }

@@ -188,6 +188,41 @@ def bench_footprint():
     return rows
 
 
+def bench_compile_cache():
+    """Kernel-dedup + pipeline accounting: cache hit-rate, unique kernels,
+    compile time cold vs warm (shared KernelCache across compiles), and the
+    per-pass time breakdown on the repeated-layer workload."""
+    from repro.core import KernelCache
+    from .graphs import stacked_transformer_graph
+
+    rows = []
+    for name, (module, comp, lib) in compiled_all().items():
+        s = comp.stats
+        rows.append((f"compile/{name}/time", s.compile_time_s * 1e6,
+                     f"hit_rate={s.cache_hit_rate:.2f} "
+                     f"unique={s.unique_kernels}/{s.stitched_kernels}"))
+
+    cache = KernelCache()
+    module = stacked_transformer_graph(num_layers=8)
+    t0 = time.perf_counter()
+    cold = compile_module(module, OPTS, kernel_cache=cache)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = compile_module(stacked_transformer_graph(num_layers=8), OPTS,
+                          kernel_cache=cache)
+    t_warm = time.perf_counter() - t0
+    s = cold.stats
+    rows.append(("compile/stacked8/cold", t_cold * 1e6,
+                 f"hit_rate={s.cache_hit_rate:.2f} "
+                 f"unique={s.unique_kernels}/{s.stitched_kernels}"))
+    rows.append(("compile/stacked8/warm", t_warm * 1e6,
+                 f"hit_rate={warm.stats.cache_hit_rate:.2f} "
+                 f"speedup={t_cold / max(t_warm, 1e-9):.2f}x"))
+    for pname, pt in s.pass_times.items():
+        rows.append((f"compile/stacked8/pass/{pname}", pt * 1e6, ""))
+    return rows
+
+
 def bench_stitched_kernels():
     """Interpret-mode wall time + max error of the hand-tuned Pallas kernels
     vs their jnp oracles (correctness-grade numbers, not TPU perf)."""
@@ -219,6 +254,7 @@ ALL_BENCHES = [
     bench_smem_stats,
     bench_breakdown,
     bench_footprint,
+    bench_compile_cache,
     bench_stitched_kernels,
 ]
 

@@ -25,12 +25,18 @@ def main():
               f"{s.stitched_kernels} stitched + {s.standalone_kernels} standalone "
               f"(+{s.library_calls} library) | XLA baseline {s.xla_baseline_kernels} "
               f"| ratio {s.fusion_ratio:.3f}")
+        print(f"    kernel cache: {s.unique_kernels} unique kernels for "
+              f"{s.stitched_kernels} fusions ({s.kernel_cache_hits} hits, "
+              f"hit rate {s.cache_hit_rate:.0%}) | compile "
+              f"{s.compile_time_s * 1e3:.1f}ms "
+              + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in s.pass_times.items()))
         for r in s.reports:
             shared = f", {r.shared_bytes}B shared" if r.shared_bytes else ""
             shrunk = f", {r.num_shrinks} shrinks" if r.num_shrinks else ""
+            cached = "  [cached]" if r.cached else ""
             print(f"    {r.name}: {r.num_ops:3d} ops  blocks={r.blocks:<4d} "
                   f"scratch={r.scratch_bytes}B{shared}{shrunk}  "
-                  f"roots={','.join(r.roots)}")
+                  f"roots={','.join(r.roots)}{cached}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,21 @@
 """FusionStitching core: StitchIR, deep fusion, schedule planning, VMEM
-memory planning, and IrEmitterStitched Pallas code generation."""
+memory planning, and IrEmitterStitched Pallas code generation — organized
+as an explicit pass pipeline (``pipeline``) with fusion-signature kernel
+deduplication (``signature``) and a planned buffer-table runtime
+(``executor``)."""
 from .compiler import CompiledModule, CompileStats, StitchOptions, compile_module
-from .executor import StitchedExecutable, reference_execute
+from .executor import ExecutionPlan, StitchedExecutable, reference_execute
+from .pipeline import (
+    CodegenPass,
+    CompilationState,
+    FinalizePass,
+    FusionPass,
+    MemoryPass,
+    PassPipeline,
+    SchedulePass,
+    default_pipeline,
+)
+from .signature import CacheEntry, KernelCache, fusion_signature
 from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
 from .ir import (
     GraphBuilder,
@@ -30,7 +44,10 @@ from .xla_baseline import xla_baseline_groups, xla_baseline_kernel_count
 
 __all__ = [
     "CompiledModule", "CompileStats", "StitchOptions", "compile_module",
-    "StitchedExecutable", "reference_execute", "FusedComputation",
+    "StitchedExecutable", "ExecutionPlan", "reference_execute",
+    "CompilationState", "PassPipeline", "default_pipeline", "FusionPass",
+    "SchedulePass", "MemoryPass", "CodegenPass", "FinalizePass",
+    "KernelCache", "CacheEntry", "fusion_signature", "FusedComputation",
     "FusionConfig", "FusionPlan", "deep_fuse", "GraphBuilder", "Instruction",
     "Module", "Tensor", "apply_op", "trace", "MemoryInfeasible", "MemoryPlan",
     "plan_memory", "CostModel", "PerfLibrary", "TPU_V5E", "TpuSpec",

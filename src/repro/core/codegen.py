@@ -129,6 +129,19 @@ class StitchedKernel:
     def __call__(self, *args):
         return self.fn(*args)
 
+    def bind(self, fusion: FusedComputation) -> "StitchedKernel":
+        """Re-bind this kernel to a structurally-identical fusion instance.
+
+        The compiled callable is purely positional, so any fusion with the
+        same fusion-signature can share it; only the instruction lists used
+        by the runtime to gather arguments and scatter results change.
+        ``solution``/``plan`` keep referring to the representative instance.
+        """
+        return StitchedKernel(
+            fusion, self.solution, self.plan, self.fn,
+            fusion.inputs, fusion.roots,
+        )
+
 
 def emit_fusion(
     fusion: FusedComputation,

@@ -1,25 +1,26 @@
-"""The FusionStitching compiler pipeline — paper Fig. 4.
+"""The FusionStitching compiler facade — paper Fig. 4.
 
-HloModule (StitchIR) -> computation fusion -> schedule planning -> code
-generation, with the memory-planning feedback loop into the
-ScheduleConsistencyChecker (§5.1.2).
+The actual pipeline (deep fusion -> schedule tuning -> memory planning ->
+code generation, with the memory feedback loop of §5.1.2 and
+fusion-signature kernel deduplication) lives in ``pipeline.py`` as explicit
+passes over a ``CompilationState``.  ``compile_module`` stays the one-call
+entry point: it builds the state, runs the default pass pipeline, and
+returns a ``CompiledModule`` wrapping the planned executable and stats.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from . import span as span_lib
-from .codegen import StitchedKernel, emit_fusion
+from .codegen import StitchedKernel
 from .executor import StitchedExecutable
-from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
-from .ir import Module
-from .memory import MemoryInfeasible, MemoryPlan, plan_memory
-from .perf_library import CostModel, PerfLibrary
-from .schedule import any_satisfiable
-from .tuning import TunedPlan, tune
+from .fusion import FusionPlan
+from .perf_library import PerfLibrary
+from .pipeline import CompilationState, default_pipeline
+from .signature import KernelCache
 from .xla_baseline import xla_baseline_kernel_count
 
 
@@ -32,6 +33,8 @@ class StitchOptions:
     ew_footprint_limit: int = 64 * 1024 * 1024
     max_fusion_ops: int = 256
     perf_library_path: Optional[str] = None
+    kernel_cache_path: Optional[str] = None  # persistent tuning records
+    dedup_kernels: bool = True               # fusion-signature kernel reuse
     interpret: bool = True                   # CPU validation; False on TPU
 
 
@@ -45,6 +48,8 @@ class FusionReport:
     shared_bytes: int
     num_shrinks: int
     roots: List[str]
+    cached: bool = False                     # kernel reused via signature
+    signature: str = ""
 
 
 @dataclass
@@ -56,12 +61,25 @@ class CompileStats:
     predicted_time_s: float
     library_time_s: float = 0.0
     reports: List[FusionReport] = field(default_factory=list)
+    # kernel-dedup + pipeline accounting
+    kernel_cache_hits: int = 0               # fusion instances served by cache
+    kernel_cache_misses: int = 0             # unique fusions tuned this compile
+    tuning_disk_hits: int = 0                # tuning searches skipped (warm disk)
+    unique_kernels: int = 0                  # distinct kernels backing the fusions
+    kernels_emitted: int = 0                 # Pallas kernels emitted THIS compile
+    compile_time_s: float = 0.0
+    pass_times: Dict[str, float] = field(default_factory=dict)
 
     @property
     def fusion_ratio(self) -> float:
         """paper Fig. 7: our kernel count / XLA baseline kernel count."""
         ours = self.stitched_kernels + self.standalone_kernels
         return ours / self.xla_baseline_kernels if self.xla_baseline_kernels else 1.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.kernel_cache_hits + self.kernel_cache_misses
+        return self.kernel_cache_hits / total if total else 0.0
 
     @property
     def smem_average(self) -> float:
@@ -92,93 +110,39 @@ class CompiledModule:
         return self.executable(feeds)
 
 
-def compile_module(
-    module: Module, options: Optional[StitchOptions] = None
-) -> CompiledModule:
-    opts = options or StitchOptions()
-    lib = PerfLibrary(opts.perf_library_path)
-
-    # --- ScheduleConsistencyChecker with memory feedback (Fig. 4) --------
-    def consistency(roots, members) -> bool:
-        sol = any_satisfiable(
-            members,
-            roots,
-            replicate_limit=opts.replicate_limit,
-            max_blocks=opts.max_blocks,
-        )
-        if sol is None:
-            return False
-        try:
-            plan_memory(members, roots, sol, opts.vmem_limit)
-        except MemoryInfeasible:
-            return False
-        return True
-
-    fcfg = FusionConfig(
-        fuse_dot=opts.fuse_dot,
-        ew_footprint_limit=opts.ew_footprint_limit,
-        max_fusion_ops=opts.max_fusion_ops,
-        consistency=consistency,
-    )
-    plan = deep_fuse(module, fcfg)
+def build_outputs(state: CompilationState) -> None:
+    """FinalizePass body: final FusionPlan, planned executable, stats."""
+    lib = state.library
 
     kernels: Dict[str, StitchedKernel] = {}
     reports: List[FusionReport] = []
     predicted = 0.0
-    final_fusions: List[FusedComputation] = []
-    extra_standalone = []
-
-    for fusion in plan.fusions:
-        members, roots = fusion.members, fusion.roots
-        tuned = tune(
-            members,
-            roots,
-            lib,
-            max_blocks=opts.max_blocks,
-            replicate_limit=opts.replicate_limit,
-        )
-        mem: Optional[MemoryPlan] = None
-        # memory feedback loop: drop deepest members until the plan fits
-        while tuned is not None:
-            try:
-                mem = plan_memory(members, roots, tuned.solution, opts.vmem_limit)
-                break
-            except MemoryInfeasible:
-                if len(members) <= 1:
-                    tuned = None
-                    break
-                members = members[:-1]
-                fusion = FusedComputation(members, name=fusion.name)
-                roots = fusion.roots
-                tuned = tune(
-                    members,
-                    roots,
-                    lib,
-                    max_blocks=opts.max_blocks,
-                    replicate_limit=opts.replicate_limit,
-                )
-        if tuned is None or mem is None:
-            # unfusable after all: emit every member standalone
-            extra_standalone.extend(fusion.members)
-            continue
-        kernel = emit_fusion(fusion, tuned.solution, mem, interpret=opts.interpret)
-        kernels[fusion.name] = kernel
-        final_fusions.append(fusion)
-        predicted += tuned.cost_s
+    final_fusions = []
+    for p in state.planned:
+        kernels[p.fusion.name] = p.kernel
+        final_fusions.append(p.fusion)
+        predicted += p.entry.cost_s
+        mem = p.entry.memory
         reports.append(
             FusionReport(
-                fusion.name,
-                len(members),
-                tuned.solution.blocks,
-                tuned.cost_s,
+                p.fusion.name,
+                len(p.fusion.members),
+                p.entry.solution.blocks,
+                p.entry.cost_s,
                 mem.total_bytes,
                 mem.shared_bytes,
                 mem.num_shrinks,
-                [r.name for r in roots],
+                [r.name for r in p.fusion.roots],
+                cached=p.cache_hit,
+                signature=p.entry.signature,
             )
         )
 
-    plan = FusionPlan(final_fusions, plan.standalone + extra_standalone, module)
+    plan = FusionPlan(
+        final_fusions,
+        state.fusion_plan.standalone + state.demoted,
+        state.module,
+    )
     library_time = 0.0
     for s in plan.standalone:
         # standalone kernels are costed as single-op launches; library-call
@@ -190,20 +154,57 @@ def compile_module(
         else:
             predicted += t
 
-    executable = StitchedExecutable(module, plan, kernels)
+    executable = StitchedExecutable(state.module, plan, kernels)
     st = executable.launch_stats()
-    stats = CompileStats(
+    hits = sum(1 for p in state.planned if p.cache_hit)
+    state.executable = executable
+    state.stats = CompileStats(
         stitched_kernels=st.stitched_kernels,
         standalone_kernels=st.standalone_kernels,
         library_calls=st.library_calls,
-        xla_baseline_kernels=xla_baseline_kernel_count(module),
+        xla_baseline_kernels=xla_baseline_kernel_count(state.module),
         predicted_time_s=predicted,
         library_time_s=library_time,
         reports=reports,
+        kernel_cache_hits=hits,
+        kernel_cache_misses=len(state.planned) - hits,
+        tuning_disk_hits=sum(1 for p in state.planned if p.tuned_from_disk),
+        unique_kernels=len({id(p.entry) for p in state.planned}),
+        kernels_emitted=sum(1 for p in state.planned if p.is_representative),
     )
+
+
+def compile_module(
+    module,
+    options: Optional[StitchOptions] = None,
+    kernel_cache: Optional[KernelCache] = None,
+) -> CompiledModule:
+    """Compile a StitchIR module through the default pass pipeline.
+
+    ``kernel_cache`` may be shared across calls so repeated compiles of
+    structurally-identical graphs (per-layer blocks, per-request recompiles)
+    reuse tuned schedules and emitted kernels.
+    """
+    opts = options or StitchOptions()
+    t0 = time.perf_counter()
+    state = CompilationState(
+        module=module,
+        options=opts,
+        library=PerfLibrary(opts.perf_library_path),
+        kernel_cache=(
+            kernel_cache
+            if kernel_cache is not None
+            else KernelCache(opts.kernel_cache_path)
+        ),
+    )
+    default_pipeline().run(state)
+    state.stats.compile_time_s = time.perf_counter() - t0
+    state.stats.pass_times = dict(state.pass_times)
     if opts.perf_library_path:
-        lib.save()
-    return CompiledModule(executable, stats)
+        state.library.save()
+    if opts.kernel_cache_path:
+        state.kernel_cache.save()
+    return CompiledModule(state.executable, state.stats)
 
 
 def _whole(instr):

@@ -3,20 +3,25 @@
 ``reference_execute`` walks the module with ``apply_op`` — the oracle every
 generated kernel is validated against.
 
-``StitchedExecutable`` runs the compiled fusion plan: stitched Pallas kernels
-for fused computations, direct XLA dispatch for standalone instructions
-(library dots).  It counts kernel launches — the paper's Fig-7 metric.
+``StitchedExecutable`` runs a compile-time **ExecutionPlan** instead of
+re-walking the module per call: constant-like chains are folded exactly once
+at plan-build time, every value that flows between execution units lives in
+a flat buffer table with precomputed last-use release points (intermediate
+buffers are dropped eagerly), and each unit is pre-bound to its kernel and
+operand slots.  The per-call hot path is a flat loop over pre-bound steps —
+no graph traversal, no constant re-evaluation, no dict-keyed lookups.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .codegen import StitchedKernel
-from .fusion import FusionPlan
+from .fusion import FusionPlan, constant_like
 from .ir import Instruction, Module, apply_op
 
 
@@ -47,8 +52,193 @@ class LaunchStats:
         return self.stitched_kernels + self.standalone_kernels
 
 
+def order_units(plan: FusionPlan) -> List[object]:
+    """Topological order over execution units (fusions + standalone).
+
+    Fusion groups interleave in instruction order, so firing a group at its
+    last member's position is NOT safe; we order groups by their value
+    dependences instead (fusion-time cycle checks guarantee the group graph
+    is a DAG).
+    """
+    units: List[object] = list(plan.fusions) + list(plan.standalone)
+    unit_of: Dict[int, int] = {}
+    for ui, u in enumerate(units):
+        members = [u] if isinstance(u, Instruction) else u.members
+        for m in members:
+            unit_of[m.id] = ui
+    deps: List[set] = [set() for _ in units]
+    for ui, u in enumerate(units):
+        srcs = u.operands if isinstance(u, Instruction) else u.inputs
+        for s in srcs:
+            if s.id in unit_of and unit_of[s.id] != ui:
+                deps[ui].add(unit_of[s.id])
+    # Kahn's algorithm (deque: the sorted-list pop(0) was O(n^2))
+    indeg = [len(d) for d in deps]
+    rdeps: List[set] = [set() for _ in units]
+    for ui, d in enumerate(deps):
+        for v in d:
+            rdeps[v].add(ui)
+    ready = deque(sorted(ui for ui, k in enumerate(indeg) if k == 0))
+    order = []
+    while ready:
+        ui = ready.popleft()
+        order.append(ui)
+        for v in sorted(rdeps[ui]):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    if len(order) != len(units):
+        raise RuntimeError("cyclic fusion plan — fusion cycle check failed")
+    return [units[ui] for ui in order]
+
+
+class _KernelStep:
+    """One stitched-kernel launch, pre-bound to its buffer slots."""
+
+    __slots__ = ("kernel", "arg_slots", "out_slots", "release")
+
+    def __init__(self, kernel: StitchedKernel, arg_slots, out_slots):
+        self.kernel = kernel
+        self.arg_slots = arg_slots
+        self.out_slots = out_slots
+        self.release: List[int] = []
+
+
+class _OpStep:
+    """One standalone instruction (library dot etc.), pre-bound."""
+
+    __slots__ = ("instr", "arg_slots", "out_slot", "release")
+
+    def __init__(self, instr: Instruction, arg_slots, out_slot):
+        self.instr = instr
+        self.arg_slots = arg_slots
+        self.out_slot = out_slot
+        self.release: List[int] = []
+
+
+class ExecutionPlan:
+    """Precomputed run recipe for a compiled FusionPlan.
+
+    Built once at compile time:
+      * constant-like chains are evaluated here (``fold_evals`` counts the
+        evaluations — they never recur at call time);
+      * a flat buffer table holds every inter-unit value; slots are released
+        (set to None) right after their last consuming step;
+      * each step carries its kernel/instruction and operand slot indices.
+    """
+
+    def __init__(
+        self,
+        module: Module,
+        plan: FusionPlan,
+        kernels: Dict[str, StitchedKernel],
+    ):
+        member_ids = {m.id for f in plan.fusions for m in f.members}
+        covered = member_ids | {s.id for s in plan.standalone}
+
+        units = order_units(plan)
+
+        # ---- which values must live in the buffer table -------------------
+        needed: set = {r.id for r in module.roots}
+        for u in units:
+            if isinstance(u, Instruction):
+                needed.update(o.id for o in u.operands)
+            else:
+                needed.update(i.id for i in kernels[u.name].inputs)
+
+        slot_of: Dict[int, int] = {}
+
+        def new_slot(instr_id: int) -> int:
+            slot_of[instr_id] = len(slot_of)
+            return slot_of[instr_id]
+
+        # ---- parameters + compile-time constant folding -------------------
+        self.fold_evals = 0
+        folded_vals: Dict[int, object] = {}
+
+        def fold(instr: Instruction):
+            if instr.id in folded_vals:
+                return folded_vals[instr.id]
+            v = apply_op(instr, *[fold(o) for o in instr.operands])
+            self.fold_evals += 1
+            folded_vals[instr.id] = v
+            return v
+
+        self._param_binds: List[Tuple[str, int, object, Tuple[int, ...]]] = []
+        template_fill: List[Tuple[int, object]] = []
+        for instr in module.instructions:
+            if instr.opcode == "parameter":
+                s = new_slot(instr.id)
+                self._param_binds.append(
+                    (instr.name, s, instr.dtype, tuple(instr.shape))
+                )
+            elif instr.id not in covered:
+                if not (instr.opcode == "constant" or constant_like(instr)):
+                    raise RuntimeError(
+                        f"{instr.name}: uncovered non-constant instruction"
+                    )
+                if instr.id in needed:
+                    template_fill.append((new_slot(instr.id), fold(instr)))
+
+        # ---- pre-bound steps in unit order ---------------------------------
+        self.steps: List[object] = []
+        for u in units:
+            if isinstance(u, Instruction):
+                arg_slots = [slot_of[o.id] for o in u.operands]
+                self.steps.append(_OpStep(u, arg_slots, new_slot(u.id)))
+            else:
+                k = kernels[u.name]
+                arg_slots = [slot_of[i.id] for i in k.inputs]
+                out_slots = [new_slot(r.id) for r in k.outputs]
+                self.steps.append(_KernelStep(k, arg_slots, out_slots))
+
+        self.num_slots = len(slot_of)
+        self._root_binds: List[Tuple[str, int]] = [
+            (r.name, slot_of[r.id]) for r in module.roots
+        ]
+
+        # ---- eager-release points: free a slot after its last read ---------
+        keep = {s for _, s in self._root_binds}
+        last_read: Dict[int, int] = {}
+        for si, step in enumerate(self.steps):
+            for s in step.arg_slots:
+                last_read[s] = si
+        for s, si in last_read.items():
+            if s not in keep:
+                self.steps[si].release.append(s)
+
+        template: List[Optional[object]] = [None] * self.num_slots
+        for s, v in template_fill:
+            template[s] = v
+        self._template = template
+
+    @property
+    def num_folded(self) -> int:
+        return sum(1 for v in self._template if v is not None)
+
+    def execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        buf = list(self._template)
+        for name, slot, dtype, shape in self._param_binds:
+            v = jnp.asarray(feeds[name], dtype=dtype)
+            if tuple(v.shape) != shape:
+                raise ValueError(f"{name}: feed shape {v.shape} != {shape}")
+            buf[slot] = v
+        for step in self.steps:
+            if type(step) is _KernelStep:
+                outs = step.kernel(*[buf[s] for s in step.arg_slots])
+                for s, o in zip(step.out_slots, outs):
+                    buf[s] = o
+            else:
+                buf[step.out_slot] = apply_op(
+                    step.instr, *[buf[s] for s in step.arg_slots]
+                )
+            for s in step.release:
+                buf[s] = None
+        return {name: buf[s] for name, s in self._root_binds}
+
+
 class StitchedExecutable:
-    """Runs a compiled FusionPlan; one stitched kernel per fusion."""
+    """Runs a compiled FusionPlan through its precomputed ExecutionPlan."""
 
     def __init__(
         self,
@@ -59,47 +249,7 @@ class StitchedExecutable:
         self.module = module
         self.plan = plan
         self.kernels = kernels
-        self._member_ids = {m.id for f in plan.fusions for m in f.members}
-        self._schedule = self._build_schedule()
-
-    def _build_schedule(self):
-        """Topological order over execution units (fusions + standalone).
-
-        Fusion groups interleave in instruction order, so firing a group at
-        its last member's position is NOT safe; we order groups by their
-        value dependences instead (fusion-time cycle checks guarantee the
-        group graph is a DAG).
-        """
-        units: List[object] = list(self.plan.fusions) + list(self.plan.standalone)
-        unit_of: Dict[int, int] = {}
-        for ui, u in enumerate(units):
-            members = [u] if isinstance(u, Instruction) else u.members
-            for m in members:
-                unit_of[m.id] = ui
-        deps: List[set] = [set() for _ in units]
-        for ui, u in enumerate(units):
-            srcs = u.operands if isinstance(u, Instruction) else u.inputs
-            for s in srcs:
-                if s.id in unit_of and unit_of[s.id] != ui:
-                    deps[ui].add(unit_of[s.id])
-        # Kahn's algorithm
-        indeg = [len(d) for d in deps]
-        rdeps: List[set] = [set() for _ in units]
-        for ui, d in enumerate(deps):
-            for v in d:
-                rdeps[v].add(ui)
-        ready = sorted(ui for ui, k in enumerate(indeg) if k == 0)
-        order = []
-        while ready:
-            ui = ready.pop(0)
-            order.append(ui)
-            for v in sorted(rdeps[ui]):
-                indeg[v] -= 1
-                if indeg[v] == 0:
-                    ready.append(v)
-        if len(order) != len(units):
-            raise RuntimeError("cyclic fusion plan — fusion cycle check failed")
-        return [units[ui] for ui in order]
+        self.execution_plan = ExecutionPlan(module, plan, kernels)
 
     def launch_stats(self) -> LaunchStats:
         st = LaunchStats()
@@ -111,29 +261,4 @@ class StitchedExecutable:
         return st
 
     def __call__(self, feeds: Dict[str, object]) -> Dict[str, object]:
-        from .fusion import constant_like
-
-        covered = self._member_ids | {s.id for s in self.plan.standalone}
-        vals: Dict[int, object] = {}
-        for instr in self.module.instructions:
-            if instr.opcode == "parameter":
-                vals[instr.id] = jnp.asarray(feeds[instr.name], dtype=instr.dtype)
-            elif instr.id not in covered and (
-                instr.opcode == "constant" or constant_like(instr)
-            ):
-                # free (compile-time-foldable) chain — no kernel launch
-                vals[instr.id] = apply_op(
-                    instr, *[vals[o.id] for o in instr.operands]
-                )
-        for unit in self._schedule:
-            if isinstance(unit, Instruction):  # standalone instruction
-                vals[unit.id] = apply_op(
-                    unit, *[vals[o.id] for o in unit.operands]
-                )
-            else:                              # fused computation
-                kernel = self.kernels[unit.name]
-                args = [vals[i.id] for i in kernel.inputs]
-                outs = kernel(*args)
-                for r, o in zip(kernel.outputs, outs):
-                    vals[r.id] = o
-        return {r.name: vals[r.id] for r in self.module.roots}
+        return self.execution_plan.execute(feeds)

@@ -41,12 +41,21 @@ def constant_like(instr: Instruction) -> bool:
     them).  These never launch a kernel — XLA folds them — and the paper
     inlines trivial ops via thread composition; they are absorbed into any
     consumer fusion regardless of layer roofs and never counted standalone.
+
+    Memoized on the instruction (operands are immutable after construction):
+    the naive recursion is exponential on shared-operand DAG chains.
     """
+    cached = getattr(instr, "_constant_like", None)
+    if cached is not None:
+        return cached
     if instr.opcode in ("constant", "iota"):
-        return True
-    if instr.opcode in ("broadcast", "reshape", "bitcast", "transpose"):
-        return all(constant_like(o) for o in instr.operands)
-    return False
+        result = True
+    elif instr.opcode in ("broadcast", "reshape", "bitcast", "transpose"):
+        result = all(constant_like(o) for o in instr.operands)
+    else:
+        result = False
+    instr._constant_like = result
+    return result
 
 
 @dataclass

@@ -126,22 +126,58 @@ class CostModel:
         )
 
 
-class PerfLibrary:
-    """Persistent KV store of per-op schedule timings (paper §4.4)."""
+class JsonStore:
+    """Tiny persistent JSON KV store with atomic save — the paper's §4.4
+    storage protocol, shared by PerfLibrary and the kernel cache."""
 
-    def __init__(self, path: Optional[str] = None, model: Optional[CostModel] = None):
+    def __init__(self, path: Optional[str] = None):
         self.path = path
-        self.model = model or CostModel()
-        self._store: Dict[str, float] = {}
+        self._store: Dict[str, object] = {}
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
         if path and os.path.exists(path):
             try:
                 with open(path) as f:
                     self._store = json.load(f)
             except (json.JSONDecodeError, OSError):
                 self._store = {}
+
+    def get(self, key: str, default=None):
+        with self._lock:
+            return self._store.get(key, default)
+
+    def put(self, key: str, value) -> None:
+        with self._lock:
+            self._store[key] = value
+
+    def pop(self, key: str, default=None):
+        with self._lock:
+            return self._store.pop(key, default)
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        tmp = self.path + ".tmp"
+        with self._lock:
+            with open(tmp, "w") as f:
+                json.dump(self._store, f)
+        os.replace(tmp, self.path)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
+
+    def __len__(self):
+        return len(self._store)
+
+
+class PerfLibrary(JsonStore):
+    """Persistent KV store of per-op schedule timings (paper §4.4)."""
+
+    def __init__(self, path: Optional[str] = None, model: Optional[CostModel] = None):
+        super().__init__(path)
+        self.model = model or CostModel()
+        self.hits = 0
+        self.misses = 0
 
     @staticmethod
     def key(instr: Instruction, sched: Sched, launch_blocks: int) -> str:
@@ -169,15 +205,3 @@ class PerfLibrary:
             self.misses += 1
             self._store[k] = t
         return t
-
-    def save(self) -> None:
-        if not self.path:
-            return
-        tmp = self.path + ".tmp"
-        with self._lock:
-            with open(tmp, "w") as f:
-                json.dump(self._store, f)
-        os.replace(tmp, self.path)
-
-    def __len__(self):
-        return len(self._store)

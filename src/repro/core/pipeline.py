@@ -1,0 +1,319 @@
+"""The FusionStitching pass pipeline — paper Fig. 4 as explicit passes.
+
+``compile_module`` used to be one monolithic function; here every stage of
+the paper's pipeline is a ``Pass`` over a shared ``CompilationState``
+artifact, so stages can be tested, timed, and reordered in isolation:
+
+    FusionPass     deep fusion (§3.2) with the ScheduleConsistencyChecker
+    SchedulePass   per-fusion schedule tuning (§4.3) with fusion-signature
+                   kernel-cache lookup — structurally identical fusions
+                   (stacked transformer layers) tune once
+    MemoryPass     VMEM scratch planning (§5.1) with the memory-infeasible
+                   feedback loop back into tuning (shrink + retune)
+    CodegenPass    IrEmitterStitched Pallas emission (§5.2), deduplicated:
+                   one emitted kernel per unique fusion signature
+    FinalizePass   execution-plan construction + CompileStats
+
+The memory feedback edge of Fig. 4 is preserved: MemoryPass re-invokes the
+tuner when a fusion must shrink to fit the scratch budget, and members it
+drops are demoted to standalone kernels (never silently lost).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .codegen import StitchedKernel, emit_fusion
+from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
+from .ir import Instruction, Module
+from .memory import MemoryInfeasible, plan_memory
+from .perf_library import PerfLibrary
+from .schedule import Unsatisfiable, any_satisfiable, resolve_schedules
+from .signature import CacheEntry, KernelCache, fusion_signature
+from .tuning import TunedPlan, score, tune
+
+
+@dataclass
+class PlannedFusion:
+    """One fusion instance bound to its (possibly shared) cache entry."""
+
+    fusion: FusedComputation
+    entry: CacheEntry
+    is_representative: bool          # this instance built the entry
+    kernel: Optional[StitchedKernel] = None
+    tuned_from_disk: bool = False
+
+    @property
+    def cache_hit(self) -> bool:
+        return not self.is_representative
+
+
+@dataclass
+class CompilationState:
+    """The artifact every pass reads and extends."""
+
+    module: Module
+    options: "StitchOptions"              # noqa: F821 — compiler facade type
+    library: PerfLibrary
+    kernel_cache: KernelCache
+    fusion_plan: Optional[FusionPlan] = None
+    planned: List[PlannedFusion] = field(default_factory=list)
+    demoted: List[Instruction] = field(default_factory=list)
+    pass_times: Dict[str, float] = field(default_factory=dict)
+    # filled by FinalizePass
+    executable: Optional[object] = None
+    stats: Optional[object] = None
+
+
+class Pass:
+    name = "pass"
+
+    def run(self, state: CompilationState) -> None:
+        raise NotImplementedError
+
+
+class PassPipeline:
+    def __init__(self, passes: List[Pass]):
+        self.passes = list(passes)
+
+    def run(self, state: CompilationState) -> CompilationState:
+        for p in self.passes:
+            t0 = time.perf_counter()
+            p.run(state)
+            state.pass_times[p.name] = time.perf_counter() - t0
+        return state
+
+
+# --------------------------------------------------------------------------
+# Passes
+# --------------------------------------------------------------------------
+
+
+class FusionPass(Pass):
+    """Deep fusion with the schedule+memory consistency checker (Fig. 4)."""
+
+    name = "fusion"
+
+    def run(self, state: CompilationState) -> None:
+        opts = state.options
+
+        def consistency(roots, members) -> bool:
+            sol = any_satisfiable(
+                members,
+                roots,
+                replicate_limit=opts.replicate_limit,
+                max_blocks=opts.max_blocks,
+            )
+            if sol is None:
+                return False
+            try:
+                plan_memory(members, roots, sol, opts.vmem_limit)
+            except MemoryInfeasible:
+                return False
+            return True
+
+        fcfg = FusionConfig(
+            fuse_dot=opts.fuse_dot,
+            ew_footprint_limit=opts.ew_footprint_limit,
+            max_fusion_ops=opts.max_fusion_ops,
+            consistency=consistency,
+        )
+        state.fusion_plan = deep_fuse(state.module, fcfg)
+
+
+def _options_fingerprint(opts) -> str:
+    """Compile-options salt for cache keys: a kernel tuned/emitted under one
+    (interpret, memory-budget, blocks) regime must never serve a compile
+    running under another, even through a shared or persistent cache."""
+    return (
+        f"i{int(opts.interpret)}:v{opts.vmem_limit}:r{opts.replicate_limit}"
+        f":b{opts.max_blocks}:"
+    )
+
+
+class SchedulePass(Pass):
+    """Tune each fusion's schedule; deduplicate by fusion signature.
+
+    A cache hit binds the instance to the existing entry: no tuning, no
+    memory planning, no emission for this instance.  A persistent-store hit
+    (warm process) skips the tuning search but still resolves/validates the
+    recorded root schedules against this fusion.
+    """
+
+    name = "schedule"
+
+    def run(self, state: CompilationState) -> None:
+        opts = state.options
+        cache = state.kernel_cache
+        salt = _options_fingerprint(opts)
+        for fusion in state.fusion_plan.fusions:
+            sig = salt + fusion_signature(fusion)
+            if opts.dedup_kernels:
+                entry = cache.get(sig)
+                if entry is not None:
+                    state.planned.append(PlannedFusion(fusion, entry, False))
+                    continue
+            tuned, from_disk = self._tune(state, fusion, sig)
+            if tuned is None:
+                state.demoted.extend(fusion.members)
+                continue
+            roots = fusion.roots
+            entry = CacheEntry(
+                signature=sig,
+                solution=tuned.solution,
+                memory=None,
+                cost_s=tuned.cost_s,
+                root_scheds=[tuned.solution.root_scheds[r.id] for r in roots],
+            )
+            if opts.dedup_kernels:
+                cache.put(entry)
+            state.planned.append(
+                PlannedFusion(fusion, entry, True, tuned_from_disk=from_disk)
+            )
+
+    def _tune(self, state, fusion, sig):
+        opts = state.options
+        members, roots = fusion.members, fusion.roots
+        if opts.dedup_kernels:
+            hint = state.kernel_cache.tuning_hint(sig)
+            if hint is not None and len(hint) == len(roots):
+                try:
+                    sol = resolve_schedules(
+                        members,
+                        roots,
+                        {r.id: s for r, s in zip(roots, hint)},
+                        opts.replicate_limit,
+                    )
+                    return TunedPlan(sol, score(members, sol, state.library)), True
+                except Unsatisfiable:
+                    pass  # stale record — fall back to the full search
+        tuned = tune(
+            members,
+            roots,
+            state.library,
+            max_blocks=opts.max_blocks,
+            replicate_limit=opts.replicate_limit,
+        )
+        return tuned, False
+
+
+class MemoryPass(Pass):
+    """VMEM scratch planning with the §5.1.2 feedback loop: on
+    MemoryInfeasible, drop the deepest member, re-tune, retry.  Dropped
+    members are demoted to standalone kernels."""
+
+    name = "memory"
+
+    def run(self, state: CompilationState) -> None:
+        dead = set()  # entries whose representative proved unfusable
+        kept: List[PlannedFusion] = []
+        for p in state.planned:
+            if not p.is_representative:
+                if id(p.entry) in dead:
+                    # the shared plan died — this instance runs standalone too
+                    state.demoted.extend(p.fusion.members)
+                    continue
+                kept.append(p)  # shares the representative's plan
+                continue
+            if self._plan(state, p):
+                kept.append(p)
+            else:
+                dead.add(id(p.entry))
+                if state.options.dedup_kernels:
+                    state.kernel_cache.remove(p.entry.signature)
+        state.planned = kept
+
+    def _plan(self, state, p: PlannedFusion) -> bool:
+        opts = state.options
+        fusion, entry = p.fusion, p.entry
+        members, roots = fusion.members, fusion.roots
+        tuned: Optional[TunedPlan] = TunedPlan(entry.solution, entry.cost_s)
+        dropped: List[Instruction] = []
+        while tuned is not None:
+            try:
+                mem = plan_memory(members, roots, tuned.solution, opts.vmem_limit)
+            except MemoryInfeasible:
+                if len(members) <= 1:
+                    tuned = None
+                    break
+                dropped.append(members[-1])
+                members = members[:-1]
+                fusion = FusedComputation(members, name=fusion.name)
+                roots = fusion.roots
+                tuned = tune(
+                    members,
+                    roots,
+                    state.library,
+                    max_blocks=opts.max_blocks,
+                    replicate_limit=opts.replicate_limit,
+                )
+                continue
+            # success
+            state.demoted.extend(dropped)
+            p.fusion = fusion
+            entry.solution = tuned.solution
+            entry.cost_s = tuned.cost_s
+            entry.memory = mem
+            entry.root_scheds = [
+                tuned.solution.root_scheds[r.id] for r in roots
+            ]
+            entry.kept_members = len(members)
+            if dropped and opts.dedup_kernels:
+                # the persisted record (written pre-shrink by SchedulePass)
+                # no longer describes the structure its signature hashes
+                state.kernel_cache.discard_disk(entry.signature)
+            return True
+        # unfusable after all: every member (kept + dropped) runs standalone
+        state.demoted.extend(fusion.members)
+        state.demoted.extend(dropped)
+        return False
+
+
+class CodegenPass(Pass):
+    """Emit one Pallas kernel per unique signature; bind instances.
+
+    Representatives are planned before their hits (SchedulePass order), so
+    an entry's kernel always exists by the time an instance binds to it.
+    """
+
+    name = "codegen"
+
+    def run(self, state: CompilationState) -> None:
+        for p in state.planned:
+            entry = p.entry
+            if p.is_representative:
+                kernel = emit_fusion(
+                    p.fusion, entry.solution, entry.memory,
+                    interpret=state.options.interpret,
+                )
+                entry.kernel = kernel
+                p.kernel = kernel
+            else:
+                # the representative may have shrunk under memory feedback;
+                # apply the identical shrink to this instance before binding
+                kept_n = entry.kept_members or len(p.fusion.members)
+                if kept_n < len(p.fusion.members):
+                    state.demoted.extend(p.fusion.members[kept_n:])
+                    p.fusion = FusedComputation(
+                        p.fusion.members[:kept_n], name=p.fusion.name
+                    )
+                p.kernel = entry.kernel.bind(p.fusion)
+
+
+class FinalizePass(Pass):
+    """Assemble the final FusionPlan, the planned executable, and stats."""
+
+    name = "finalize"
+
+    def run(self, state: CompilationState) -> None:
+        # imported here: compiler is the facade above this module
+        from .compiler import build_outputs
+
+        build_outputs(state)
+
+
+def default_pipeline() -> PassPipeline:
+    return PassPipeline(
+        [FusionPass(), SchedulePass(), MemoryPass(), CodegenPass(), FinalizePass()]
+    )

@@ -11,7 +11,7 @@ requests join between ticks — continuous batching without recompilation
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,26 @@ class Request:
     done: bool = False
 
 
+# Jitted decode steps are shared across engines with the same (config, pool)
+# — the serving-layer analogue of the compiler's fusion-signature kernel
+# dedup: N replica engines trace/compile the hot-path function once.
+_DECODE_CACHE: Dict[Tuple[str, int], Callable] = {}
+
+
+def _decode_fn(cfg, pool_size: int) -> Tuple[Callable, bool]:
+    key = (repr(cfg), pool_size)
+    hit = key in _DECODE_CACHE
+    if not hit:
+        _DECODE_CACHE[key] = jax.jit(
+            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, act)
+        )
+    return _DECODE_CACHE[key], hit
+
+
+def decode_cache_size() -> int:
+    return len(_DECODE_CACHE)
+
+
 class ServeEngine:
     def __init__(self, cfg, params, pool_size: int = 4, max_len: int = 512):
         self.cfg = cfg
@@ -40,10 +60,10 @@ class ServeEngine:
         self.slot_pos = np.zeros(pool_size, np.int32)
         self.slot_remaining = np.zeros(pool_size, np.int32)
         self.slot_last = np.zeros(pool_size, np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, act)
-        )
+        self._decode, self.decode_cache_hit = _decode_fn(cfg, pool_size)
         self.ticks = 0
+        self.tokens_generated = 0
+        self.requests_completed = 0
 
     @property
     def active_slots(self) -> List[int]:
@@ -79,9 +99,11 @@ class ServeEngine:
         req.out_tokens.append(nxt)
         self.slot_last[slot] = nxt
         self.slot_remaining[slot] -= 1
+        self.tokens_generated += 1
         if self.slot_remaining[slot] <= 0:
             req.done = True
             self.slot_req[slot] = None
+            self.requests_completed += 1
 
     # ------------------------------------------------------------- tick
     def tick(self):
@@ -102,9 +124,11 @@ class ServeEngine:
             self.slot_last[s] = nxt
             self.slot_pos[s] += 1
             self.slot_remaining[s] -= 1
+            self.tokens_generated += 1
             if self.slot_remaining[s] <= 0 or self.slot_pos[s] >= self.max_len - 1:
                 r.done = True
                 self.slot_req[s] = None
+                self.requests_completed += 1
         self.ticks += 1
 
     def run_until_done(self, max_ticks: int = 2000):

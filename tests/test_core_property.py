@@ -5,6 +5,9 @@ memory planning -> Pallas codegen) on graphs no human wrote.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from conftest import compile_and_compare

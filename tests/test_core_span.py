@@ -1,6 +1,9 @@
 """Work/Span analysis properties (paper §3.1)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GraphBuilder, compute_spans, critical_path_length, layers

@@ -1,0 +1,299 @@
+"""Pass pipeline, fusion signatures, kernel cache, and the planned runtime."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import compile_and_compare
+from repro.core import (
+    GraphBuilder,
+    KernelCache,
+    StitchOptions,
+    compile_module,
+    deep_fuse,
+    fusion_signature,
+    reference_execute,
+    trace,
+)
+from repro.core import executor as executor_mod
+
+
+# ------------------------------------------------------------- signatures
+def _rmsnorm_module(shape=(8, 32), eps=1e-6, fn="rsqrt"):
+    def f(b, x, g):
+        ms = b.reduce(b.square(x), (1,), "mean")
+        inv = b.unary(fn, ms + eps)
+        return x * b.broadcast(inv, x.shape, (0,)) * b.broadcast(g, x.shape, (1,))
+
+    return trace(f, ("x", shape, jnp.float32), ("g", (shape[1],), jnp.float32))
+
+
+def _single_fusion(module):
+    plan = deep_fuse(module)
+    assert len(plan.fusions) == 1
+    return plan.fusions[0]
+
+
+def test_signature_equal_across_traces():
+    """Two separately-traced copies (different instr ids/names) hash equal."""
+    f1 = _single_fusion(_rmsnorm_module())
+    f2 = _single_fusion(_rmsnorm_module())
+    assert f1.members[0].id != f2.members[0].id
+    assert fusion_signature(f1) == fusion_signature(f2)
+
+
+def test_signature_differs_on_shape():
+    f1 = _single_fusion(_rmsnorm_module(shape=(8, 32)))
+    f2 = _single_fusion(_rmsnorm_module(shape=(8, 64)))
+    assert fusion_signature(f1) != fusion_signature(f2)
+
+
+def test_signature_differs_on_elementwise_fn():
+    f1 = _single_fusion(_rmsnorm_module(fn="rsqrt"))
+    f2 = _single_fusion(_rmsnorm_module(fn="sqrt"))
+    assert fusion_signature(f1) != fusion_signature(f2)
+
+
+def test_signature_differs_on_constant_value():
+    """Attr payloads (here the folded eps constant) enter the hash: the
+    value is baked into the emitted kernel body."""
+    f1 = _single_fusion(_rmsnorm_module(eps=1e-6))
+    f2 = _single_fusion(_rmsnorm_module(eps=1e-3))
+    assert fusion_signature(f1) != fusion_signature(f2)
+
+
+# ------------------------------------------------------------ kernel cache
+def _stacked_module(n_layers):
+    def f(b, x, *weights):
+        gs, Ws = weights[:n_layers], weights[n_layers:]
+        for g, W in zip(gs, Ws):
+            ms = b.reduce(b.square(x), (1,), "mean")
+            inv = b.rsqrt(ms + 1e-6)
+            normed = (
+                x * b.broadcast(inv, x.shape, (0,)) * b.broadcast(g, x.shape, (1,))
+            )
+            h = b.dot(normed, W)  # library call: layer boundary
+            x = x + b.tanh(h)
+        return x
+
+    specs = [("x", (8, 32), jnp.float32)]
+    specs += [(f"g{i}", (32,), jnp.float32) for i in range(n_layers)]
+    specs += [(f"W{i}", (32, 32), jnp.float32) for i in range(n_layers)]
+    return trace(f, *specs)
+
+
+def _feeds(module, rng):
+    return {
+        p.name: rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
+        for p in module.parameters
+    }
+
+
+def test_kernel_cache_hits_on_identical_blocks(rng):
+    """N identical middle layers tune/emit once; outputs match the oracle."""
+    m = _stacked_module(4)
+    comp = compile_and_compare(m, _feeds(m, rng))
+    s = comp.stats
+    assert s.stitched_kernels > s.unique_kernels, "identical fusions must dedup"
+    assert s.kernel_cache_hits >= 2          # the identical middle layers
+    assert s.kernel_cache_hits + s.kernel_cache_misses == s.stitched_kernels
+    assert sum(1 for r in s.reports if r.cached) == s.kernel_cache_hits
+    # cached instances share the representative's signature
+    by_sig = {}
+    for r in s.reports:
+        by_sig.setdefault(r.signature, []).append(r.cached)
+    for sig, cached_flags in by_sig.items():
+        assert cached_flags[0] is False      # first instance tuned it
+        assert all(cached_flags[1:])         # the rest hit
+
+
+def test_dedup_disabled_tunes_every_fusion(rng):
+    m = _stacked_module(3)
+    comp = compile_and_compare(m, _feeds(m, rng), dedup_kernels=False)
+    s = comp.stats
+    assert s.kernel_cache_hits == 0
+    assert s.unique_kernels == s.stitched_kernels
+
+
+def test_shared_cache_across_compiles(rng):
+    """A shared KernelCache makes a recompile of the same graph all-hits."""
+    cache = KernelCache()
+    opts = StitchOptions(max_blocks=32)
+    comp1 = compile_module(_stacked_module(3), opts, kernel_cache=cache)
+    assert comp1.stats.kernels_emitted == comp1.stats.unique_kernels > 0
+    comp2 = compile_module(_stacked_module(3), opts, kernel_cache=cache)
+    assert comp2.stats.kernel_cache_hits == comp2.stats.stitched_kernels
+    assert comp2.stats.kernel_cache_misses == 0
+    assert comp2.stats.kernels_emitted == 0  # everything served from cache
+    m = _stacked_module(3)
+    ref = reference_execute(m, _feeds(m, rng))
+    out = compile_module(m, opts, kernel_cache=cache)(_feeds(m, rng))
+    assert set(out) == set(ref)
+
+
+def test_kernel_cache_disk_roundtrip(tmp_path, rng):
+    """Warm processes skip the tuning search via the persisted records."""
+    path = str(tmp_path / "kernels.json")
+    opts = StitchOptions(max_blocks=32, kernel_cache_path=path)
+    compile_module(_stacked_module(3), opts)
+    comp2 = compile_module(_stacked_module(3), opts)  # fresh cache, warm disk
+    assert comp2.stats.tuning_disk_hits == comp2.stats.kernel_cache_misses > 0
+    m = _stacked_module(3)
+    feeds = _feeds(m, rng)
+    out = compile_module(m, opts)(feeds)
+    ref = reference_execute(m, feeds)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_cache_not_shared_across_differing_options(rng):
+    """A kernel tuned under one options regime must not serve another:
+    cache keys are salted with the compile-options fingerprint."""
+    cache = KernelCache()
+    m = _stacked_module(2)
+    compile_module(_stacked_module(2), StitchOptions(max_blocks=32),
+                   kernel_cache=cache)
+    comp2 = compile_module(_stacked_module(2), StitchOptions(max_blocks=8),
+                           kernel_cache=cache)
+    assert comp2.stats.kernel_cache_hits == 0  # different max_blocks regime
+    feeds = _feeds(m, rng)
+    out = compile_module(m, StitchOptions(max_blocks=8), kernel_cache=cache)(feeds)
+    ref = reference_execute(m, feeds)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_unfusable_representative_does_not_poison_hits(rng, monkeypatch):
+    """If memory planning kills a fusion down to nothing, signature-sharing
+    instances are demoted too (not bound to a kernel-less entry), and the
+    dead entry leaves the cache so later compiles retune cleanly."""
+    from repro.core import (
+        CompilationState, FinalizePass, FusionPass, MemoryPass, SchedulePass,
+    )
+    from repro.core import pipeline as pipeline_mod
+    from repro.core.memory import MemoryInfeasible
+    from repro.core.perf_library import PerfLibrary
+
+    m = _stacked_module(3)
+    cache = KernelCache()
+    opts = StitchOptions(max_blocks=32)
+    feeds = _feeds(m, rng)
+    ref = reference_execute(m, feeds)
+
+    # run fusion + schedule normally: entries exist, middle layers hit
+    state = CompilationState(
+        module=m, options=opts, library=PerfLibrary(), kernel_cache=cache
+    )
+    FusionPass().run(state)
+    SchedulePass().run(state)
+    assert any(p.cache_hit for p in state.planned)
+    assert len(cache) > 0
+
+    # now make every memory plan infeasible: each representative shrinks to
+    # nothing, its entry must die, and its hits must be demoted with it
+    def always_infeasible(*a, **kw):
+        raise MemoryInfeasible("forced by test")
+
+    monkeypatch.setattr(pipeline_mod, "plan_memory", always_infeasible)
+    MemoryPass().run(state)
+    assert state.planned == [], "all planned fusions must be demoted"
+    assert state.demoted, "demoted members must run standalone"
+    assert len(cache) == 0, "dead entries must leave the cache"
+
+    # the module still executes correctly, everything standalone
+    FinalizePass().run(state)  # codegen has nothing to emit
+    assert state.stats.stitched_kernels == 0
+    assert state.stats.standalone_kernels > 0
+    out = state.executable(feeds)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
+        )
+
+    # with memory planning restored, the same cache compiles cleanly again
+    monkeypatch.undo()
+    comp2 = compile_module(m, opts, kernel_cache=cache)
+    assert comp2.stats.stitched_kernels > 0
+    out2 = comp2(feeds)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(out2[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
+        )
+
+
+# --------------------------------------------------------- pass pipeline
+def test_pass_times_cover_all_stages(rng):
+    m = _stacked_module(2)
+    comp = compile_and_compare(m, _feeds(m, rng))
+    assert set(comp.stats.pass_times) == {
+        "fusion", "schedule", "memory", "codegen", "finalize"
+    }
+    assert comp.stats.compile_time_s > 0
+
+
+# ------------------------------------------------------- planned runtime
+def _const_chain_module():
+    """A constant-like chain feeding a library dot: stays uncovered by any
+    fusion, so the execution plan must fold it at compile time."""
+    b = GraphBuilder("folded")
+    x = b.parameter("x", (4, 8), jnp.float32)
+    c = b.constant(np.arange(64.0, dtype=np.float32))
+    w = b.reshape(c, (8, 8))
+    _out = b.dot(x, w)  # non-fusable -> library call
+    return b.module
+
+
+def test_folded_constants_computed_once(rng, monkeypatch):
+    m = _const_chain_module()
+    comp = compile_module(m, StitchOptions(max_blocks=16))
+    plan = comp.executable.execution_plan
+    assert plan.fold_evals >= 2              # constant + reshape
+    folds_after_compile = plan.fold_evals
+
+    feeds = {"x": rng.randn(4, 8).astype("f4")}
+    ref = reference_execute(m, feeds)
+
+    seen_opcodes = []
+    real_apply = executor_mod.apply_op
+
+    def spy(instr, *vals, **kw):
+        seen_opcodes.append(instr.opcode)
+        return real_apply(instr, *vals, **kw)
+
+    monkeypatch.setattr(executor_mod, "apply_op", spy)
+    out1 = comp(feeds)
+    out2 = comp(feeds)
+    # calls never re-evaluate the folded chain — only the library dot runs
+    assert set(seen_opcodes) <= {"dot"}
+    assert plan.fold_evals == folds_after_compile
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out1[k]), np.asarray(ref[k]),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(out2[k]), np.asarray(ref[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_buffer_table_releases_intermediates(rng):
+    """Buffers are freed right after their last use; module outputs never."""
+    m = _stacked_module(3)
+    comp = compile_and_compare(m, _feeds(m, rng))
+    plan = comp.executable.execution_plan
+    released = [s for step in plan.steps for s in step.release]
+    assert released, "a stacked graph must have releasable intermediates"
+    assert len(released) == len(set(released)), "each slot released once"
+    out_slots = {s for _, s in plan._root_binds}
+    assert not (set(released) & out_slots)
+
+
+def test_execution_plan_steps_prebound(rng):
+    m = _stacked_module(2)
+    comp = compile_and_compare(m, _feeds(m, rng))
+    plan = comp.executable.execution_plan
+    kernel_steps = [s for s in plan.steps if hasattr(s, "out_slots")]
+    assert len(kernel_steps) == comp.stats.stitched_kernels
+    for step in plan.steps:
+        for s in step.arg_slots:
+            assert 0 <= s < plan.num_slots

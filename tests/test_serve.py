@@ -3,6 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduced_config
 from repro.models import decode_step, init_cache, init_params
 from repro.serve import Request, ServeEngine

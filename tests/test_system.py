@@ -4,6 +4,8 @@ the serving path — the integration layer above the unit tests."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduced_config
 from repro.data import SyntheticLM
 from repro.models import init_params
