@@ -168,6 +168,44 @@ def stacked_transformer_graph(num_layers: int = 8) -> Module:
     return b.module
 
 
+def reduce_towers_graph(num_towers: int = 6) -> Module:
+    """Adversarial for greedy fusion (reduce-heavy): N independent
+    square/scale/reduce towers whose sinks are *reduces*, not elementwise
+    ops — so the paper's ElementwiseFusion never groups them and Algorithm 1
+    commits one kernel per tower.  The towers are tiny, so launch overhead
+    dominates; the cost-guided planner's horizontal-merge pass packs them
+    into one multi-root kernel."""
+    b = GraphBuilder("ReduceTowers")
+    B, D = 32, 64
+    for i in range(num_towers):
+        x = b.parameter(f"x{i}", (B, D), jnp.float32)
+        s = b.parameter(f"s{i}", (B, D), jnp.float32)
+        e = b.square(x * 0.5 + s)
+        _ = b.reduce(e * e, (0, 1), "sum")
+    return b.module
+
+
+def broadcast_towers_graph(num_towers: int = 5) -> Module:
+    """Adversarial for greedy fusion (broadcast/replication-heavy): each
+    tower broadcasts a small per-feature gain across a wide activation,
+    normalizes by a mid-tower reduce, broadcasts back to the wide shape, and
+    ends in a *reshape* sink (invisible to ElementwiseFusion, which only
+    groups elementwise sinks).  Greedy commits one maximal kernel per tower,
+    each carrying the reduce and two widening broadcasts; the planner
+    explores split-at-reduce / split-before-broadcast partitions per tower
+    and packs the towers into fewer kernels via horizontal merge."""
+    b = GraphBuilder("BcastHeavy")
+    B, D = 16, 32
+    for i in range(num_towers):
+        x = b.parameter(f"x{i}", (B, D), jnp.float32)
+        g = b.parameter(f"g{i}", (D,), jnp.float32)
+        scaled = x * b.broadcast(g, (B, D), (1,))
+        m = b.reduce(scaled, (1,), "mean")             # (B,)
+        cen = scaled - b.broadcast(m, (B, D), (0,))
+        _ = b.reshape(b.sigmoid(cen), (B * D,))        # flat sink
+    return b.module
+
+
 ALL_GRAPHS = {
     "LR": lr_graph,
     "W2V": w2v_graph,
@@ -176,4 +214,6 @@ ALL_GRAPHS = {
     "Speech": speech_graph,
     "NMT": nmt_graph,
     "Stacked": stacked_transformer_graph,
+    "ReduceTowers": reduce_towers_graph,
+    "BcastHeavy": broadcast_towers_graph,
 }

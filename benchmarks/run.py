@@ -7,7 +7,10 @@ metric for that table: fusion ratio, speedup, shared-memory bytes, ...).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from dataclasses import replace
 
 import numpy as np
 
@@ -223,6 +226,41 @@ def bench_compile_cache():
     return rows
 
 
+def bench_fusion_planner():
+    """Greedy Algorithm 1 vs the cost-guided planner: kernel launches and
+    LatencyModel-predicted µs per graph, plus predicted-vs-counted launch
+    reduction.  ReduceTowers and BcastHeavy are the adversarial graphs where
+    greedy's per-seed commit misses the horizontal merges."""
+    rows = []
+    for name, fn in ALL_GRAPHS.items():
+        module = fn()
+        greedy = compile_module(module, replace(OPTS, planner="greedy"))
+        cost = compile_module(module, replace(OPTS, planner="cost"))
+        gk = greedy.stats.stitched_kernels + greedy.stats.standalone_kernels
+        ck = cost.stats.stitched_kernels + cost.stats.standalone_kernels
+        s = cost.stats
+        rows.append(
+            (f"planner/{name}/kernels", 0.0,
+             f"greedy={gk} cost={ck} explored={s.plans_explored} "
+             f"rejected={s.plans_rejected} merges={s.planner_merges} "
+             f"splits={s.planner_splits}")
+        )
+        rows.append(
+            (f"planner/{name}/predicted_us", s.planner_predicted_s * 1e6,
+             f"greedy_us={s.greedy_predicted_s * 1e6:.2f}")
+        )
+        # predicted reduction is the fusion pass's pre-demotion view
+        # (planner_kernels); counted is what the final executable actually
+        # launches — they diverge when MemoryPass demotes members
+        rows.append(
+            (f"planner/{name}/launch_reduction", 0.0,
+             f"predicted={s.greedy_kernels - s.planner_kernels} "
+             f"counted={s.launches_saved_vs_greedy} "
+             f"vs_unfused={s.launches_saved_vs_unfused}")
+        )
+    return rows
+
+
 def bench_stitched_kernels():
     """Interpret-mode wall time + max error of the hand-tuned Pallas kernels
     vs their jnp oracles (correctness-grade numbers, not TPU perf)."""
@@ -255,15 +293,36 @@ ALL_BENCHES = [
     bench_breakdown,
     bench_footprint,
     bench_compile_cache,
+    bench_fusion_planner,
     bench_stitched_kernels,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated bench-name substrings (e.g. fusion_planner)",
+    )
+    ap.add_argument(
+        "--json-out",
+        default=None,
+        help="also write rows as JSON (CI uploads this as an artifact)",
+    )
+    args = ap.parse_args(argv)
+    wanted = args.only.split(",") if args.only else None
+    rows = []
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:
+        if wanted and not any(w in bench.__name__ for w in wanted):
+            continue
         for name, us, derived in bench():
+            rows.append({"name": name, "us_per_call": us, "derived": derived})
             print(f"{name},{us:.2f},{derived}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

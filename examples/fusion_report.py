@@ -30,6 +30,13 @@ def main():
               f"hit rate {s.cache_hit_rate:.0%}) | compile "
               f"{s.compile_time_s * 1e3:.1f}ms "
               + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in s.pass_times.items()))
+        print(f"    planner[{s.planner_mode}]: {s.plans_explored} plans explored "
+              f"({s.plans_rejected} infeasible), {s.planner_splits} splits, "
+              f"{s.planner_merges} merges | modeled "
+              f"{s.planner_predicted_s * 1e6:.2f}us vs greedy "
+              f"{s.greedy_predicted_s * 1e6:.2f}us | launches saved: "
+              f"{s.launches_saved_vs_greedy} vs greedy, "
+              f"{s.launches_saved_vs_unfused} vs unfused")
         for r in s.reports:
             shared = f", {r.shared_bytes}B shared" if r.shared_bytes else ""
             shrunk = f", {r.num_shrinks} shrinks" if r.num_shrinks else ""

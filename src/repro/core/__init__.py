@@ -16,7 +16,15 @@ from .pipeline import (
     default_pipeline,
 )
 from .signature import CacheEntry, KernelCache, fusion_signature
-from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
+from .fusion import (
+    FusedComputation,
+    FusionConfig,
+    FusionPlan,
+    FusionScorer,
+    PlannerStats,
+    deep_fuse,
+)
+from .latency import DeviceSpec, LatencyModel, instr_flops
 from .ir import (
     GraphBuilder,
     Instruction,
@@ -48,7 +56,8 @@ __all__ = [
     "CompilationState", "PassPipeline", "default_pipeline", "FusionPass",
     "SchedulePass", "MemoryPass", "CodegenPass", "FinalizePass",
     "KernelCache", "CacheEntry", "fusion_signature", "FusedComputation",
-    "FusionConfig", "FusionPlan", "deep_fuse", "GraphBuilder", "Instruction",
+    "FusionConfig", "FusionPlan", "FusionScorer", "PlannerStats", "deep_fuse",
+    "DeviceSpec", "LatencyModel", "instr_flops", "GraphBuilder", "Instruction",
     "Module", "Tensor", "apply_op", "trace", "MemoryInfeasible", "MemoryPlan",
     "plan_memory", "CostModel", "PerfLibrary", "TPU_V5E", "TpuSpec",
     "REPLICATED", "Sched", "ScheduleSolution", "Unsatisfiable", "blocks_of",

@@ -36,6 +36,9 @@ class StitchOptions:
     kernel_cache_path: Optional[str] = None  # persistent tuning records
     dedup_kernels: bool = True               # fusion-signature kernel reuse
     interpret: bool = True                   # CPU validation; False on TPU
+    # "cost": candidate-plan exploration under the shared LatencyModel with
+    # the greedy result as the floor; "greedy": the paper's Algorithm 1.
+    planner: str = "cost"
 
 
 @dataclass
@@ -69,12 +72,36 @@ class CompileStats:
     kernels_emitted: int = 0                 # Pallas kernels emitted THIS compile
     compile_time_s: float = 0.0
     pass_times: Dict[str, float] = field(default_factory=dict)
+    # fusion-planner accounting (core/fusion.py PlannerStats)
+    planner_mode: str = "greedy"
+    plans_explored: int = 0                  # candidate partitions scored
+    plans_rejected: int = 0                  # candidates with no feasible plan
+    planner_splits: int = 0                  # seeds committed non-greedily
+    planner_merges: int = 0                  # horizontal merges applied
+    planner_predicted_s: float = 0.0         # modeled latency, committed plan
+    greedy_predicted_s: float = 0.0          # modeled latency, greedy floor
+    greedy_kernels: int = 0                  # launches the greedy plan needs
+    planner_kernels: int = 0                 # fusion-pass view, pre-demotion
+    unfused_kernels: int = 0                 # launches with no fusion at all
 
     @property
     def fusion_ratio(self) -> float:
         """paper Fig. 7: our kernel count / XLA baseline kernel count."""
         ours = self.stitched_kernels + self.standalone_kernels
         return ours / self.xla_baseline_kernels if self.xla_baseline_kernels else 1.0
+
+    @property
+    def launches_saved_vs_unfused(self) -> int:
+        """Kernel launches the committed plan saves over one-launch-per-op."""
+        return self.unfused_kernels - (
+            self.stitched_kernels + self.standalone_kernels
+        )
+
+    @property
+    def launches_saved_vs_greedy(self) -> int:
+        return self.greedy_kernels - (
+            self.stitched_kernels + self.standalone_kernels
+        )
 
     @property
     def cache_hit_rate(self) -> float:
@@ -142,6 +169,7 @@ def build_outputs(state: CompilationState) -> None:
         final_fusions,
         state.fusion_plan.standalone + state.demoted,
         state.module,
+        planner=state.fusion_plan.planner,
     )
     library_time = 0.0
     for s in plan.standalone:
@@ -157,6 +185,16 @@ def build_outputs(state: CompilationState) -> None:
     executable = StitchedExecutable(state.module, plan, kernels)
     st = executable.launch_stats()
     hits = sum(1 for p in state.planned if p.cache_hit)
+    from .fusion import constant_like
+
+    unfused = sum(
+        1
+        for i in state.module.instructions
+        if i.opcode not in ("parameter", "constant")
+        and not constant_like(i)
+        and not i.is_library_call
+    )
+    pstats = state.fusion_plan.planner
     state.executable = executable
     state.stats = CompileStats(
         stitched_kernels=st.stitched_kernels,
@@ -171,6 +209,16 @@ def build_outputs(state: CompilationState) -> None:
         tuning_disk_hits=sum(1 for p in state.planned if p.tuned_from_disk),
         unique_kernels=len({id(p.entry) for p in state.planned}),
         kernels_emitted=sum(1 for p in state.planned if p.is_representative),
+        planner_mode=pstats.mode if pstats else "greedy",
+        plans_explored=pstats.plans_explored if pstats else 0,
+        plans_rejected=pstats.plans_rejected if pstats else 0,
+        planner_splits=pstats.splits_taken if pstats else 0,
+        planner_merges=pstats.merges_taken if pstats else 0,
+        planner_predicted_s=pstats.predicted_s if pstats else 0.0,
+        greedy_predicted_s=pstats.greedy_predicted_s if pstats else 0.0,
+        greedy_kernels=pstats.greedy_kernels if pstats else 0,
+        planner_kernels=pstats.planned_kernels if pstats else 0,
+        unfused_kernels=unfused,
     )
 
 

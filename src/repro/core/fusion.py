@@ -1,4 +1,5 @@
-"""Deep fusion — paper §3.2 (ElementwiseFusion + Algorithm 1).
+"""Deep fusion — paper §3.2 (ElementwiseFusion + Algorithm 1) — grown into a
+**cost-guided fusion planner**.
 
 The driver walks layers bottom-up (span 0 upward).  At each *root layer* it
 first performs intra-layer ElementwiseFusion (horizontal fusion of
@@ -12,13 +13,31 @@ planner whether an optimized schedule still exists for the enlarged fusion,
 and the memory planner's infeasibility feedback arrives through the same
 callable (paper §5.1.2 — "a feedback signal is generated back to
 ScheduleConsistencyChecker").
+
+**Planner (follow-up work, arXiv:2009.10924 / 2301.13062):** the original
+paper *accepts or rejects* each greedy enlargement with a boolean check; the
+successor systems show the real wins come from evaluating alternative fusion
+plans under an analytic latency model and keeping the cheapest.  With
+``FusionConfig.planner == "cost"``, each greedy-maximal seed result becomes
+one *candidate partition* among several (split-at-reduce,
+split-before-broadcast, no-fuse), every candidate is scored with the shared
+``LatencyModel`` (``core/latency.py``) through a ``FusionScorer``, and the
+cheapest feasible partition is committed.  A final **horizontal-merge** pass
+packs independent fusions with matching root shapes into one kernel when the
+model says the saved launches beat the packing cost.  The greedy result is
+always in the candidate set, so the planner is never worse than greedy
+*under the model* (the floor property; tested in ``tests/test_planner.py``).
+``planner == "greedy"`` reproduces the paper's original behavior exactly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .ir import Instruction, Module
+from .latency import LatencyModel
+from .memory import MemoryInfeasible, plan_memory
+from .schedule import any_satisfiable
 from . import span as span_lib
 
 # Opcodes that may live inside a fused computation.
@@ -28,6 +47,10 @@ FUSABLE_OPCODES = frozenset(
         "broadcast", "reduce", "concat", "gather", "iota", "constant",
     }
 )
+
+# A broadcast that expands its operand at least this much marks a
+# replication boundary the planner may split at.
+_BCAST_EXPAND_FACTOR = 8
 
 
 def fusable_member(instr: Instruction, fuse_dot: bool) -> bool:
@@ -64,6 +87,7 @@ class FusedComputation:
 
     members: List[Instruction]           # topological order
     name: str = "fusion"
+    modeled_cost_s: Optional[float] = None   # planner's LatencyModel estimate
 
     def __post_init__(self):
         ids = {m.id for m in self.members}
@@ -104,10 +128,30 @@ class FusedComputation:
 
 
 @dataclass
+class PlannerStats:
+    """What the cost-guided planner did, for CompileStats / benchmarks."""
+
+    mode: str = "greedy"
+    plans_explored: int = 0        # candidate partitions scored (incl. greedy)
+    plans_rejected: int = 0        # candidates with no feasible schedule/memory
+    splits_taken: int = 0          # seeds committed as a non-greedy partition
+    merges_taken: int = 0          # horizontal merges applied
+    greedy_kernels: int = 0        # kernels the pure-greedy plan would launch
+    planned_kernels: int = 0       # kernels the committed plan launches
+    predicted_s: float = 0.0       # modeled latency of the committed plan
+    greedy_predicted_s: float = 0.0  # modeled latency of the greedy plan (floor)
+
+    @property
+    def launches_saved_vs_greedy(self) -> int:
+        return self.greedy_kernels - self.planned_kernels
+
+
+@dataclass
 class FusionPlan:
     fusions: List[FusedComputation]
     standalone: List[Instruction]        # unfused kernel launches (incl. LC dots)
     module: Module
+    planner: Optional[PlannerStats] = None
 
     @property
     def num_kernels(self) -> int:
@@ -131,6 +175,84 @@ class FusionConfig:
     consistency: Callable[[List[Instruction], List[Instruction]], bool] = (
         lambda roots, members: True
     )
+    # "cost": candidate-partition exploration under the LatencyModel (with
+    # the greedy result as the floor).  "greedy": the paper's Algorithm 1
+    # accept/reject, exactly as before.
+    planner: str = "cost"
+    # Scorer shared with the rest of the compile (built from the pipeline's
+    # PerfLibrary model + StitchOptions limits); a default one is
+    # constructed when the planner runs without a pipeline.
+    scorer: Optional["FusionScorer"] = None
+    # True when ``consistency`` is exactly the scorer's own feasibility
+    # check (any_satisfiable + plan_memory under the same limits) — the
+    # pipeline sets this so planner commits skip the duplicate solve.
+    # Custom checkers injected by direct deep_fuse callers keep the veto.
+    scorer_covers_consistency: bool = False
+
+
+class FusionScorer:
+    """Scores candidate partitions for the cost-guided planner.
+
+    Feasibility uses the same machinery the pipeline's consistency checker
+    uses (``any_satisfiable`` + ``plan_memory``); the time estimate is the
+    shared ``LatencyModel``.  Scores are memoized by member-id frozenset —
+    candidate partitions overlap heavily (the greedy group reappears inside
+    every merge attempt).
+    """
+
+    def __init__(
+        self,
+        model: Optional[LatencyModel] = None,
+        replicate_limit: int = 512 * 1024,
+        max_blocks: int = 4096,
+        vmem_limit: int = 4 * 1024 * 1024,
+    ):
+        self.model = model or LatencyModel()
+        self.replicate_limit = replicate_limit
+        self.max_blocks = max_blocks
+        self.vmem_limit = vmem_limit
+        self._memo: Dict[frozenset, Optional[float]] = {}
+
+    def standalone_cost(self, instr: Instruction) -> float:
+        return self.model.standalone_time(instr)
+
+    def fused_cost(self, members: List[Instruction]) -> Optional[float]:
+        """Modeled seconds for ``members`` as ONE kernel; None = infeasible."""
+        key = frozenset(m.id for m in members)
+        if key not in self._memo:
+            self._memo[key] = self._fused_cost(members)
+        return self._memo[key]
+
+    def _fused_cost(self, members: List[Instruction]) -> Optional[float]:
+        if len(members) == 1:
+            return self.standalone_cost(members[0])
+        fusion = FusedComputation(list(members), name="candidate")
+        roots = fusion.roots
+        sol = any_satisfiable(
+            members,
+            roots,
+            replicate_limit=self.replicate_limit,
+            max_blocks=self.max_blocks,
+        )
+        if sol is None:
+            return None
+        try:
+            plan_memory(members, roots, sol, self.vmem_limit)
+        except MemoryInfeasible:
+            return None
+        return self.model.fusion_time(members, roots, sol)
+
+    def partition_cost(
+        self, groups: List[List[Instruction]]
+    ) -> Optional[List[float]]:
+        """Per-group modeled cost, or None if any group is infeasible."""
+        out = []
+        for g in groups:
+            c = self.fused_cost(g)
+            if c is None:
+                return None
+            out.append(c)
+        return out
 
 
 def _topo_sorted(members: Set[Instruction], module: Module) -> List[Instruction]:
@@ -225,9 +347,229 @@ def subgraph_fuse(
     return _topo_sorted(fused, module)
 
 
+# --------------------------------------------------------------------------
+# Candidate-partition exploration (the cost-guided planner)
+# --------------------------------------------------------------------------
+
+
+def _candidate_partitions(
+    members: List[Instruction],
+) -> List[Tuple[str, List[List[Instruction]]]]:
+    """Alternative partitions of one greedy-maximal member set.
+
+    Every partition cuts ``members`` (module-topological order) into
+    contiguous runs, which can never introduce a group-level cycle: a run
+    only depends on earlier runs and on values outside the set.
+    """
+    cands: List[Tuple[str, List[List[Instruction]]]] = [("greedy", [members])]
+    if len(members) == 1:
+        return cands
+
+    # split AFTER each reduce: the reduce ends its group, so its consumers
+    # (typically a broadcast back to the wide shape) start a fresh kernel —
+    # the anti-over-fusion cut from the follow-up papers.
+    groups: List[List[Instruction]] = []
+    cur: List[Instruction] = []
+    for m in members:
+        cur.append(m)
+        if m.opcode == "reduce":
+            groups.append(cur)
+            cur = []
+    if cur:
+        groups.append(cur)
+    if len(groups) > 1:
+        cands.append(("split_reduce", groups))
+
+    # split BEFORE each widening broadcast: the replication boundary.
+    groups2: List[List[Instruction]] = []
+    cur = []
+    for m in members:
+        if (
+            cur
+            and m.opcode == "broadcast"
+            and m.operands
+            and m.num_elements
+            >= _BCAST_EXPAND_FACTOR * max(1, m.operands[0].num_elements)
+        ):
+            groups2.append(cur)
+            cur = []
+        cur.append(m)
+    if cur:
+        groups2.append(cur)
+    if len(groups2) > 1 and [len(g) for g in groups2] != [len(g) for g in groups]:
+        cands.append(("split_broadcast", groups2))
+
+    cands.append(("nofuse", [[m] for m in members]))
+    return cands
+
+
+def _consistent_partition(
+    groups: List[List[Instruction]], cfg: FusionConfig
+) -> bool:
+    """Every group must satisfy the injected SchdConsistent checker — the
+    planner explores partitions, but the extension point still vetoes.
+    Skipped when the checker is the scorer's own feasibility test, which
+    the scoring pass already ran (and memoized)."""
+    if cfg.scorer_covers_consistency:
+        return True
+    for g in groups:
+        roots = FusedComputation(list(g), name="candidate").roots
+        if not cfg.consistency(roots, g):
+            return False
+    return True
+
+
+def _choose_partition(
+    members: List[Instruction],
+    scorer: Optional[FusionScorer],
+    cfg: FusionConfig,
+    stats: PlannerStats,
+) -> Tuple[List[List[Instruction]], List[Optional[float]]]:
+    """Pick the cheapest feasible partition; greedy is the floor.
+
+    Returns (groups, per-group modeled costs).  When the greedy group cannot
+    be scored (no satisfiable schedule under the scorer's limits — only
+    reachable with a permissive external consistency checker), the greedy
+    result is committed unscored, exactly as the greedy planner would.
+    Single-member seeds are scored too, so the horizontal-merge pass can
+    still pack them (single-op launch-bound towers are exactly the
+    missed-merge pathology).
+    """
+    if scorer is None:
+        return [members], [None]
+    if len(members) <= 1:
+        cost = scorer.fused_cost(members)
+        stats.greedy_predicted_s += cost or 0.0
+        return [members], [cost]
+    cands = _candidate_partitions(members)
+    stats.plans_explored += 1
+    greedy_costs = scorer.partition_cost(cands[0][1])
+    if greedy_costs is None:
+        stats.plans_rejected += 1
+        return [members], [None]
+    best_name, best_groups, best_costs = "greedy", cands[0][1], greedy_costs
+    best_total = sum(best_costs)
+    for name, groups in cands[1:]:
+        stats.plans_explored += 1
+        costs = scorer.partition_cost(groups)
+        if costs is None or not _consistent_partition(groups, cfg):
+            stats.plans_rejected += 1
+            continue
+        total = sum(costs)
+        if total < best_total:
+            best_name, best_groups, best_costs = name, groups, costs
+            best_total = total
+    if best_name != "greedy":
+        stats.splits_taken += 1
+    stats.greedy_predicted_s += sum(greedy_costs)
+    return best_groups, list(best_costs)
+
+
+def _group_cycle(fused: Set[Instruction]) -> bool:
+    """Would the member union reach itself through outside instructions?"""
+    stack = [u for m in fused for u in m.users if u not in fused]
+    seen: Set[int] = set()
+    while stack:
+        n = stack.pop()
+        if n.id in seen:
+            continue
+        seen.add(n.id)
+        for u in n.users:
+            if u in fused:
+                return True
+            stack.append(u)
+    return False
+
+
+def _merge_key(f: FusedComputation) -> tuple:
+    return tuple(sorted((tuple(r.shape), str(r.dtype)) for r in f.roots))
+
+
+def _horizontal_merge(
+    fusions: List[FusedComputation],
+    module: Module,
+    scorer: FusionScorer,
+    cfg: FusionConfig,
+    stats: PlannerStats,
+) -> List[FusedComputation]:
+    """Pack independent fusions with matching root shapes into one kernel
+    when the model says the saved launches beat the packing cost.
+
+    Greedy never does this beyond same-layer ElementwiseFusion — missed
+    horizontal merges are one of the two greedy pathologies the XLA fusion
+    study (arXiv:2301.13062) documents.  Merges are gated on: known costs
+    for both sides, the combined op count and footprint staying under the
+    ElementwiseFusion limits, no group-level cycle through outside
+    instructions (which also keeps dependent fusions on opposite sides of a
+    library-call layer apart), a feasible merged schedule + memory plan, a
+    strict modeled-latency improvement, and the injected SchdConsistent
+    checker accepting the merged group.
+    """
+    changed = True
+    while changed:
+        changed = False
+        by_key: Dict[tuple, List[int]] = {}
+        for idx, f in enumerate(fusions):
+            by_key.setdefault(_merge_key(f), []).append(idx)
+        for idxs in by_key.values():
+            if len(idxs) < 2:
+                continue
+            for ai in range(len(idxs)):
+                a = fusions[idxs[ai]]
+                if a is None or a.modeled_cost_s is None:
+                    continue
+                for bi in range(ai + 1, len(idxs)):
+                    b = fusions[idxs[bi]]
+                    if b is None or b.modeled_cost_s is None:
+                        continue
+                    if len(a.members) + len(b.members) > cfg.max_fusion_ops:
+                        continue
+                    if (
+                        a.footprint_bytes() + b.footprint_bytes()
+                        > cfg.ew_footprint_limit
+                    ):
+                        continue
+                    union = set(a.members) | set(b.members)
+                    if _group_cycle(union):
+                        continue
+                    merged_members = _topo_sorted(union, module)
+                    stats.plans_explored += 1
+                    cost = scorer.fused_cost(merged_members)
+                    if cost is None:
+                        stats.plans_rejected += 1
+                        continue
+                    if cost >= a.modeled_cost_s + b.modeled_cost_s:
+                        continue
+                    if not _consistent_partition([merged_members], cfg):
+                        stats.plans_rejected += 1
+                        continue
+                    merged = FusedComputation(
+                        merged_members, name=a.name, modeled_cost_s=cost
+                    )
+                    fusions[idxs[ai]] = merged
+                    fusions[idxs[bi]] = None
+                    a = merged
+                    stats.merges_taken += 1
+                    changed = True
+        fusions = [f for f in fusions if f is not None]
+    return fusions
+
+
+# --------------------------------------------------------------------------
+# The driver
+# --------------------------------------------------------------------------
+
+
 def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
-    """The full deep-fusion driver (paper §3.2)."""
+    """The full fusion driver: Algorithm 1 growth (paper §3.2) plus, in
+    ``planner="cost"`` mode, candidate-partition exploration and horizontal
+    merging under the shared LatencyModel."""
     cfg = cfg or FusionConfig()
+    scorer: Optional[FusionScorer] = None
+    if cfg.planner == "cost":
+        scorer = cfg.scorer or FusionScorer()
+    stats = PlannerStats(mode=cfg.planner)
+
     span = span_lib.compute_spans(module)
     layer_map = span_lib.layers(module, span)
     max_span = max(span.values()) if span else 0
@@ -236,6 +578,7 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
     assigned: Set[int] = set()
     fusions: List[FusedComputation] = []
     forced_standalone: List[Instruction] = []
+    greedy_fusion_count = 0      # kernels the pure-greedy plan would emit
 
     for root_span in range(0, max_span + 1):
         layer = layer_map.get(root_span, [])
@@ -268,7 +611,16 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
             )
             for m in members:
                 assigned.add(m.id)
-            fusions.append(FusedComputation(members, name=f"f{len(fusions)}"))
+            greedy_fusion_count += 1
+            groups, costs = _choose_partition(members, scorer, cfg, stats)
+            for g, c in zip(groups, costs):
+                fusions.append(
+                    FusedComputation(g, name=f"f{len(fusions)}", modeled_cost_s=c)
+                )
+
+    # --- horizontal-merge post-pass (cost mode only) ---------------------
+    if scorer is not None:
+        fusions = _horizontal_merge(fusions, module, scorer, cfg, stats)
 
     # --- final pass: absorb constant-like producer chains (free ops) -----
     absorbed_fusions: List[FusedComputation] = []
@@ -284,7 +636,11 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
                 assigned.add(o.id)
                 stack.extend(o.operands)
         absorbed_fusions.append(
-            FusedComputation(_topo_sorted(members, module), name=f.name)
+            FusedComputation(
+                _topo_sorted(members, module),
+                name=f.name,
+                modeled_cost_s=f.modeled_cost_s,
+            )
         )
     fusions = absorbed_fusions
 
@@ -302,4 +658,25 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
             extra.append(f.members[0])
         else:
             real_fusions.append(f)
-    return FusionPlan(real_fusions, standalone + extra, module)
+    plan = FusionPlan(real_fusions, standalone + extra, module, planner=stats)
+
+    # --- planner accounting ----------------------------------------------
+    shared_standalone = [
+        s for s in plan.standalone if not s.is_library_call
+    ]
+    # Split/no-fuse singletons stay singleton *fusions* (never standalone),
+    # so the standalone list is identical in both modes and greedy's kernel
+    # count is one fusion per committed seed plus that shared remainder.
+    stats.planned_kernels = plan.num_kernels
+    stats.greedy_kernels = greedy_fusion_count + len(shared_standalone)
+    if scorer is not None:
+        shared_cost = sum(
+            scorer.standalone_cost(s) for s in shared_standalone
+        )
+        stats.predicted_s = shared_cost + sum(
+            f.modeled_cost_s
+            for f in plan.fusions
+            if f.modeled_cost_s is not None
+        )
+        stats.greedy_predicted_s += shared_cost
+    return plan

@@ -5,125 +5,40 @@ The paper keeps a persistent key-value store mapping
 measured kernel microseconds; on a miss it compiles a CUDA micro-kernel and
 ``nvprof``s it.  This container has no TPU to profile, so we keep the
 **storage and lookup protocol intact** (persistent JSON KV with the same key
-features) but replace the miss handler with an **analytic TPU v5e roofline
-model** — the substitution the paper itself anticipates in §4.4 ("build a
-learning model to predict a performance metric from features in the key").
-On real hardware the miss handler would compile the schedule into a Pallas
-micro-kernel and time it; the interface is identical.
+features) but replace the miss handler with the shared analytic
+``LatencyModel`` (``core/latency.py``) — the substitution the paper itself
+anticipates in §4.4 ("build a learning model to predict a performance metric
+from features in the key").  On real hardware the miss handler would compile
+the schedule into a Pallas micro-kernel and time it; the interface is
+identical.
+
+The hardware constants and roofline math used to live here; they moved to
+``core/latency.py`` so the fusion planner, the tuner, and the launch-time
+roofline table score against ONE device spec.  ``TpuSpec`` and ``CostModel``
+remain as aliases for existing callers.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
-from .ir import Instruction, EXPENSIVE_ELEMENTWISE
-from .schedule import Sched, chunk_shape, blocks_of
+from .ir import Instruction
+from .latency import (  # noqa: F401 — compatibility re-exports
+    TPU_V5E,
+    DeviceSpec,
+    LatencyModel,
+    instr_flops,
+)
+from .schedule import Sched
 
-
-@dataclass(frozen=True)
-class TpuSpec:
-    """TPU v5e per-chip numbers (the assignment's hardware constants)."""
-
-    peak_flops_bf16: float = 197e12
-    peak_flops_f32: float = 98.5e12          # MXU fp32 ~ half bf16
-    vpu_flops: float = 3.9e12                # 8x128x8 VPU lanes @ ~0.94 GHz x2
-    hbm_bw: float = 819e9
-    vmem_bytes: int = 16 * 1024 * 1024
-    ici_bw: float = 50e9                     # per link
-    launch_overhead_s: float = 2.0e-6        # kernel dispatch
-    grid_step_overhead_s: float = 1.0e-7     # per grid program (pipelined)
-    sublane: int = 8
-    lane: int = 128
-
-
-TPU_V5E = TpuSpec()
-
-# VPU op weight: how many vector-op equivalents one element costs.
-_EW_WEIGHT = {"add": 1, "sub": 1, "mul": 1, "max": 1, "min": 1, "neg": 1,
-              "abs": 1, "sign": 1, "floor": 1, "not": 1, "and": 1, "or": 1,
-              "lt": 1, "le": 1, "gt": 1, "ge": 1, "eq": 1, "ne": 1,
-              "square": 1, "reciprocal": 4, "div": 4, "sqrt": 4, "rsqrt": 4,
-              "exp": 8, "log": 8, "tanh": 12, "sigmoid": 10, "softplus": 12,
-              "silu": 12, "gelu": 14, "pow": 16}
-
-
-def instr_flops(instr: Instruction) -> float:
-    """Model FLOPs of one instruction (elementwise weighted for the VPU)."""
-    op = instr.opcode
-    if op == "elementwise":
-        w = _EW_WEIGHT.get(instr.attrs.get("fn"), 1)
-        return instr.num_elements * w
-    if op == "select":
-        return instr.num_elements
-    if op == "reduce":
-        return instr.operands[0].num_elements
-    if op == "dot":
-        lhs = instr.operands[0]
-        k = lhs.shape[-1]
-        return 2.0 * instr.num_elements * k
-    return 0.0  # shape modulation / data movement only
-
-
-def _lane_efficiency(chunk: Tuple[int, ...], spec: TpuSpec) -> float:
-    """Penalty for chunks that underfill the (8,128) VPU tile — the TPU
-    analogue of the paper's warp-multiple thread-block constraint."""
-    if not chunk:
-        return 1.0
-    lane = chunk[-1]
-    sub = chunk[-2] if len(chunk) >= 2 else 1
-    eff_l = min(1.0, lane / spec.lane) if lane < spec.lane else 1.0
-    eff_s = min(1.0, sub / spec.sublane) if sub < spec.sublane else 1.0
-    return max(0.05, eff_l * eff_s)
-
-
-class CostModel:
-    """Analytic roofline miss-handler (the TPU stand-in for nvprof)."""
-
-    def __init__(self, spec: TpuSpec = TPU_V5E):
-        self.spec = spec
-
-    def op_time(self, instr: Instruction, sched: Sched, launch_blocks: int) -> float:
-        """Time for ONE op under ``sched`` inside a kernel with
-        ``launch_blocks`` grid steps (seconds)."""
-        spec = self.spec
-        chunk = chunk_shape(instr.shape, sched)
-        replicated = sched.kind == "replicated"
-        copies = launch_blocks if replicated else 1
-        elems = int(np.prod(chunk, dtype=np.int64)) if chunk else 1
-        itemsize = np.dtype(instr.dtype).itemsize
-        total_elems = elems * (launch_blocks if not replicated else copies)
-        # bytes: write output once per copy + read operands
-        bytes_moved = total_elems * itemsize
-        for o in instr.operands:
-            o_elems = o.num_elements if replicated else o.num_elements / max(
-                1, blocks_of(o.shape, sched) if sched.kind == "chunked" else 1
-            )
-            bytes_moved += o_elems * np.dtype(o.dtype).itemsize * copies
-        flops = instr_flops(instr) * (copies if replicated else 1)
-        if instr.opcode == "dot":
-            peak = (
-                spec.peak_flops_bf16
-                if np.dtype(instr.dtype).itemsize <= 2
-                else spec.peak_flops_f32
-            )
-        else:
-            peak = spec.vpu_flops
-        eff = _lane_efficiency(chunk, spec)
-        t_compute = flops / (peak * eff)
-        t_memory = bytes_moved / (spec.hbm_bw * eff)
-        return max(t_compute, t_memory)
-
-    def kernel_time(self, num_blocks: int, op_times_sum: float) -> float:
-        return (
-            self.spec.launch_overhead_s
-            + num_blocks * self.spec.grid_step_overhead_s
-            + op_times_sum
-        )
+# Backwards-compatible names: the device spec and the per-op roofline model
+# are now defined once in core/latency.py.
+TpuSpec = DeviceSpec
+CostModel = LatencyModel
 
 
 class JsonStore:
@@ -173,9 +88,9 @@ class JsonStore:
 class PerfLibrary(JsonStore):
     """Persistent KV store of per-op schedule timings (paper §4.4)."""
 
-    def __init__(self, path: Optional[str] = None, model: Optional[CostModel] = None):
+    def __init__(self, path: Optional[str] = None, model: Optional[LatencyModel] = None):
         super().__init__(path)
-        self.model = model or CostModel()
+        self.model = model or LatencyModel()
         self.hits = 0
         self.misses = 0
 

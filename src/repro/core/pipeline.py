@@ -25,7 +25,13 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .codegen import StitchedKernel, emit_fusion
-from .fusion import FusedComputation, FusionConfig, FusionPlan, deep_fuse
+from .fusion import (
+    FusedComputation,
+    FusionConfig,
+    FusionPlan,
+    FusionScorer,
+    deep_fuse,
+)
 from .ir import Instruction, Module
 from .memory import MemoryInfeasible, plan_memory
 from .perf_library import PerfLibrary
@@ -91,7 +97,9 @@ class PassPipeline:
 
 
 class FusionPass(Pass):
-    """Deep fusion with the schedule+memory consistency checker (Fig. 4)."""
+    """Deep fusion with the schedule+memory consistency checker (Fig. 4),
+    cost-guided by the shared LatencyModel when ``options.planner`` is
+    ``"cost"`` (candidate partitions + horizontal merging)."""
 
     name = "fusion"
 
@@ -113,22 +121,40 @@ class FusionPass(Pass):
                 return False
             return True
 
+        scorer = None
+        if opts.planner == "cost":
+            # the planner scores with the SAME model the tuner's PerfLibrary
+            # uses as its miss handler — one LatencyModel per compile
+            scorer = FusionScorer(
+                model=state.library.model,
+                replicate_limit=opts.replicate_limit,
+                max_blocks=opts.max_blocks,
+                vmem_limit=opts.vmem_limit,
+            )
         fcfg = FusionConfig(
             fuse_dot=opts.fuse_dot,
             ew_footprint_limit=opts.ew_footprint_limit,
             max_fusion_ops=opts.max_fusion_ops,
             consistency=consistency,
+            planner=opts.planner,
+            scorer=scorer,
+            # the consistency closure above IS the scorer's feasibility
+            # check under the same limits — don't solve everything twice
+            scorer_covers_consistency=scorer is not None,
         )
         state.fusion_plan = deep_fuse(state.module, fcfg)
 
 
 def _options_fingerprint(opts) -> str:
     """Compile-options salt for cache keys: a kernel tuned/emitted under one
-    (interpret, memory-budget, blocks) regime must never serve a compile
-    running under another, even through a shared or persistent cache."""
+    (interpret, memory-budget, blocks, planner) regime must never serve a
+    compile running under another, even through a shared or persistent
+    cache.  The planner mode is part of the fingerprint because the planner
+    decides *partitions*: a signature that names a greedy-built structure
+    must not resurrect under a differently-partitioned compile."""
     return (
         f"i{int(opts.interpret)}:v{opts.vmem_limit}:r{opts.replicate_limit}"
-        f":b{opts.max_blocks}:"
+        f":b{opts.max_blocks}:p{opts.planner}:"
     )
 
 

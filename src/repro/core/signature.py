@@ -103,6 +103,13 @@ class CacheEntry:
     kept_members: Optional[int] = None   # after memory-feedback shrink
 
 
+# Version of the on-disk tuning-record schema.  Bump whenever the persisted
+# payload changes shape (fields, Sched encoding, cost semantics): records
+# written under any other version are silently discarded on read instead of
+# crashing a warm process on an unpacking error.
+SCHEMA_VERSION = 2
+
+
 def _sched_to_json(s: Sched) -> List:
     return [s.kind, s.split_dim, s.sword, s.sched_type]
 
@@ -117,7 +124,9 @@ class KernelCache:
 
     The persistent layer stores only the tuned schedule decision (root
     schedules + predicted cost), not the kernel: Pallas callables are cheap
-    to re-emit once tuning — the expensive search — is skipped.
+    to re-emit once tuning — the expensive search — is skipped.  Records
+    carry a ``version`` field; stale or corrupt rows are dropped on read
+    (``stale_discards`` counts them) rather than raised.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -126,6 +135,7 @@ class KernelCache:
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
+        self.stale_discards = 0
 
     # ---- in-memory entries ----------------------------------------------
     def get(self, signature: str) -> Optional[CacheEntry]:
@@ -142,6 +152,7 @@ class KernelCache:
             self._disk.put(
                 entry.signature,
                 {
+                    "version": SCHEMA_VERSION,
                     "roots": [_sched_to_json(s) for s in entry.root_scheds],
                     "blocks": entry.solution.blocks,
                     "cost_s": entry.cost_s,
@@ -167,12 +178,25 @@ class KernelCache:
 
     # ---- persistent tuning hints ----------------------------------------
     def tuning_hint(self, signature: str) -> Optional[List[Sched]]:
-        """Root schedules recorded by a previous process, or None."""
+        """Root schedules recorded by a previous process, or None.
+
+        A record from another schema version — or one that does not parse —
+        is evicted and reported as a miss, so format changes degrade to a
+        cold retune instead of a crash.
+        """
         rec = self._disk.get(signature)
         if rec is None:
             return None
+        try:
+            if rec.get("version") != SCHEMA_VERSION:
+                raise ValueError(f"schema version {rec.get('version')!r}")
+            scheds = [_sched_from_json(r) for r in rec["roots"]]
+        except (ValueError, TypeError, KeyError, AttributeError, IndexError):
+            self._disk.pop(signature)
+            self.stale_discards += 1
+            return None
         self.disk_hits += 1
-        return [_sched_from_json(r) for r in rec["roots"]]
+        return scheds
 
     def save(self) -> None:
         self._disk.save()

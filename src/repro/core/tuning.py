@@ -21,6 +21,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from .ir import Instruction
+from .latency import is_trivial as _is_trivial  # shared convention (latency.py)
 from .perf_library import PerfLibrary
 from .schedule import (
     REPLICATED,
@@ -31,17 +32,6 @@ from .schedule import (
     candidate_schedules,
     resolve_schedules,
 )
-
-_TRIVIAL = frozenset({"reshape", "bitcast", "broadcast", "constant", "iota"})
-_SMALL_TRANSPOSE_ELEMS = 4096
-
-
-def _is_trivial(instr: Instruction) -> bool:
-    if instr.opcode in _TRIVIAL:
-        return True
-    if instr.opcode == "transpose" and instr.num_elements <= _SMALL_TRANSPOSE_ELEMS:
-        return True
-    return False
 
 
 @dataclass

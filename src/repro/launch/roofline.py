@@ -24,10 +24,14 @@ import os
 from typing import Dict, List, Optional
 
 from ..configs import ARCHITECTURES, SHAPES, get_config
+from ..core.latency import TPU_V5E, LatencyModel
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # per chip
-ICI_BW = 50e9                # per link
+# Derived from the single DeviceSpec in core/latency.py — these module
+# names are kept for existing importers but no longer drift independently.
+_MODEL = LatencyModel(TPU_V5E)
+PEAK_FLOPS = TPU_V5E.peak_flops_bf16     # bf16 per chip
+HBM_BW = TPU_V5E.hbm_bw                  # per chip
+ICI_BW = TPU_V5E.ici_bw                  # per link
 
 
 def model_flops(arch: str, shape_name: str) -> float:
@@ -51,20 +55,20 @@ def analyze(rec: Dict) -> Optional[Dict]:
     byts_lo = rec.get("bytes_min", byts_hi)
     byts = (byts_lo * byts_hi) ** 0.5 if byts_lo else byts_hi  # geo-mean est.
     coll = sum(rec.get("collective_bytes", {}).values())
-    t_c = flops / (chips * PEAK_FLOPS)
-    t_m = byts / (chips * HBM_BW)
-    t_x = coll / (chips * ICI_BW)
+    t_c = _MODEL.compute_time(flops, chips)
+    t_m = _MODEL.memory_time(byts, chips)
+    t_x = _MODEL.collective_time(coll, chips)
     dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
     mf = model_flops(rec["arch"], rec["shape"])
     bound = max(t_c, t_m, t_x)
     # roofline fraction: useful-model-FLOP time over the bound time
-    useful_t = mf / (chips * PEAK_FLOPS)
+    useful_t = _MODEL.compute_time(mf, chips)
     return {
         **rec,
         "t_compute_s": t_c,
         "t_memory_s": t_m,
-        "t_memory_lo_s": byts_lo / (chips * HBM_BW),
-        "t_memory_hi_s": byts_hi / (chips * HBM_BW),
+        "t_memory_lo_s": _MODEL.memory_time(byts_lo, chips),
+        "t_memory_hi_s": _MODEL.memory_time(byts_hi, chips),
         "t_collective_s": t_x,
         "dominant": dominant,
         "model_flops": mf,

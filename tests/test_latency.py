@@ -1,0 +1,126 @@
+"""The unified LatencyModel: single device spec, per-op/per-fusion time."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceSpec,
+    GraphBuilder,
+    LatencyModel,
+    deep_fuse,
+    trace,
+)
+from repro.core.latency import TPU_V5E, instr_flops, instr_hbm_bytes
+from repro.core.schedule import REPLICATED, any_satisfiable
+
+
+# --------------------------------------------------- single source of truth
+def test_perf_library_spec_is_the_latency_spec():
+    from repro.core import perf_library
+
+    assert perf_library.TpuSpec is DeviceSpec
+    assert perf_library.TPU_V5E is TPU_V5E
+    assert perf_library.CostModel is LatencyModel
+    lib = perf_library.PerfLibrary()
+    assert isinstance(lib.model, LatencyModel)
+    assert lib.model.spec is TPU_V5E
+
+
+def test_roofline_constants_derive_from_device_spec():
+    from repro.launch import roofline
+
+    assert roofline.PEAK_FLOPS == TPU_V5E.peak_flops_bf16
+    assert roofline.HBM_BW == TPU_V5E.hbm_bw
+    assert roofline.ICI_BW == TPU_V5E.ici_bw
+    m = LatencyModel()
+    assert m.compute_time(TPU_V5E.peak_flops_bf16) == pytest.approx(1.0)
+    assert m.memory_time(TPU_V5E.hbm_bw, chips=2) == pytest.approx(0.5)
+    assert m.collective_time(TPU_V5E.ici_bw) == pytest.approx(1.0)
+
+
+def test_tuning_uses_shared_trivial_convention():
+    from repro.core import latency, tuning
+
+    assert tuning._is_trivial is latency.is_trivial
+
+
+# ----------------------------------------------------------- per-op model
+def _exp_module(shape=(64, 128)):
+    return trace(lambda b, x: b.exp(x), ("x", shape, jnp.float32))
+
+
+def test_op_time_positive_and_monotone_in_size():
+    model = LatencyModel()
+    small = _exp_module((8, 128)).instructions[-1]
+    big = _exp_module((512, 128)).instructions[-1]
+    t_small = model.op_time(small, REPLICATED, 1)
+    t_big = model.op_time(big, REPLICATED, 1)
+    assert 0 < t_small < t_big
+
+
+def test_kernel_time_charges_launch_and_grid_steps():
+    model = LatencyModel()
+    assert model.kernel_time(1, 0.0) == pytest.approx(
+        TPU_V5E.launch_overhead_s + TPU_V5E.grid_step_overhead_s
+    )
+    assert model.kernel_time(64, 0.0) > model.kernel_time(1, 0.0)
+
+
+def test_standalone_time_includes_launch_overhead():
+    model = LatencyModel()
+    instr = _exp_module((8, 128)).instructions[-1]
+    assert model.standalone_time(instr) > TPU_V5E.launch_overhead_s
+    # parameters/constants never launch
+    param = _exp_module((8, 128)).instructions[0]
+    assert param.opcode == "parameter"
+    assert model.standalone_time(param) == 0.0
+
+
+def test_flops_and_bytes_helpers():
+    m = trace(
+        lambda b, x, w: b.dot(x, w),
+        ("x", (4, 8), jnp.float32),
+        ("w", (8, 16), jnp.float32),
+    )
+    dot = m.instructions[-1]
+    assert instr_flops(dot) == 2.0 * 4 * 16 * 8
+    assert instr_hbm_bytes(dot) == (4 * 16 + 4 * 8 + 8 * 16) * 4
+
+
+# ------------------------------------------------------- per-fusion model
+def _chain_fusion():
+    m = trace(
+        lambda b, x: b.sigmoid(b.exp(x) * 2.0 + 1.0),
+        ("x", (16, 128), jnp.float32),
+    )
+    plan = deep_fuse(m)
+    assert len(plan.fusions) == 1
+    return plan.fusions[0]
+
+
+def test_fusion_time_beats_standalone_sum_on_a_chain():
+    """Fusing a chain saves launches and intermediate HBM round-trips."""
+    model = LatencyModel()
+    f = _chain_fusion()
+    sol = any_satisfiable(f.members, f.roots)
+    assert sol is not None
+    fused = model.fusion_time(f.members, f.roots, sol)
+    unfused = sum(model.standalone_time(m) for m in f.members)
+    assert 0 < fused < unfused
+
+
+def test_fusion_time_charges_replication_duplication():
+    """A replicated member of a multi-block kernel recomputes per block."""
+    model = LatencyModel()
+    f = _chain_fusion()
+    sol = any_satisfiable(f.members, f.roots)
+    base = model.fusion_time(f.members, f.roots, sol)
+    # force every member replicated under a many-block launch
+    import dataclasses
+
+    repl_sol = dataclasses.replace(
+        sol,
+        blocks=16,
+        assignment={k: REPLICATED for k in sol.assignment},
+    )
+    assert model.fusion_time(f.members, f.roots, repl_sol) > base
