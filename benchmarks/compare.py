@@ -1,0 +1,121 @@
+"""Benchmark-regression gate for CI.
+
+Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
+--json-out``) against the committed ``benchmarks/baseline.json``:
+
+  * **hard failures** (exit 1) on kernel-count / launch regressions — the
+    planner emitting MORE kernels than the baseline on any graph
+    (``planner/*/kernels`` ``cost=N``), a worse fusion ratio
+    (``fusion_ratio/*``), or a stitched launch count creeping up
+    (``stitch/*/launch_reduction`` ``stitched=N``);
+  * **warnings** (exit 0) when modeled latency (``planner/*/predicted_us``)
+    drifts past the tolerance (default ±15%).
+
+Rows only present in the baseline are skipped (CI's fast lane runs a bench
+subset); rows only present in the fresh run are reported as new.
+
+    python -m benchmarks.compare benchmarks/baseline.json bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+def _derived_int(row: dict, key: str) -> Optional[int]:
+    m = re.search(rf"\b{key}=(\d+)", str(row.get("derived", "")))
+    return int(m.group(1)) if m else None
+
+
+def _derived_float(row: dict) -> Optional[float]:
+    try:
+        return float(row["derived"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def compare(
+    baseline: Dict[str, dict],
+    fresh: Dict[str, dict],
+    latency_tolerance: float = 0.15,
+) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (hard_failures, warnings, notes)."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    notes: List[str] = []
+
+    for name, base in sorted(baseline.items()):
+        cur = fresh.get(name)
+        if cur is None:
+            continue                      # fast lane runs a bench subset
+
+        if name.startswith("planner/") and name.endswith("/kernels"):
+            b, f = _derived_int(base, "cost"), _derived_int(cur, "cost")
+            if b is not None and f is not None and f > b:
+                failures.append(
+                    f"{name}: planner kernel count regressed {b} -> {f}"
+                )
+
+        elif name.startswith("fusion_ratio/"):
+            b, f = _derived_float(base), _derived_float(cur)
+            if b is not None and f is not None and f > b + 1e-9:
+                failures.append(f"{name}: fusion ratio regressed {b} -> {f}")
+
+        elif name.startswith("stitch/") and name.endswith("/launch_reduction"):
+            b = _derived_int(base, "stitched")
+            f = _derived_int(cur, "stitched")
+            if b is not None and f is not None and f > b:
+                failures.append(
+                    f"{name}: stitched launch count regressed {b} -> {f}"
+                )
+
+        elif name.startswith("planner/") and name.endswith("/predicted_us"):
+            b, f = base.get("us_per_call"), cur.get("us_per_call")
+            if b and f and abs(f - b) > latency_tolerance * abs(b):
+                warnings.append(
+                    f"{name}: modeled latency drifted "
+                    f"{b:.2f}us -> {f:.2f}us (> {latency_tolerance:.0%})"
+                )
+
+    for name in sorted(set(fresh) - set(baseline)):
+        notes.append(f"{name}: new row (not in baseline)")
+    return failures, warnings, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("fresh", help="bench.json from this run")
+    ap.add_argument(
+        "--latency-tolerance",
+        type=float,
+        default=0.15,
+        help="relative modeled-latency drift that triggers a warning",
+    )
+    args = ap.parse_args(argv)
+    failures, warnings, notes = compare(
+        load_rows(args.baseline), load_rows(args.fresh), args.latency_tolerance
+    )
+    for n in notes:
+        print(f"NOTE  {n}")
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if failures:
+        print(f"{len(failures)} benchmark regression(s) vs baseline")
+        return 1
+    print(f"benchmark gate OK ({len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -206,6 +206,29 @@ def broadcast_towers_graph(num_towers: int = 5) -> Module:
     return b.module
 
 
+def stitch_pipeline_graph() -> Module:
+    """Adversarial for single-schedule fusion (schedule-break-heavy): a wide
+    row-softmax feeds a full 2-D transpose and a tail normalization.  The
+    softmax intermediate (512x320 f32, 640KB) exceeds the replicate limit,
+    so no single block schedule crosses the transpose — the paper-faithful
+    compiler splits here into three kernels.  Multi-phase stitching lowers
+    the whole pipeline as ONE kernel: the softmax phase materializes its
+    output in a full VMEM staging buffer and the transpose phase re-tiles
+    it under its own sub-schedule (arXiv:1911.11576 / 2009.10924)."""
+    b = GraphBuilder("StitchPipe")
+    B, D = 512, 320
+    x = b.parameter("x", (B, D), jnp.float32)
+    g = b.parameter("g", (D,), jnp.float32)
+    scaled = x * b.broadcast(g, (B, D), (1,))
+    mx = b.reduce(scaled, (1,), "max")
+    e = b.exp(scaled - b.broadcast(mx, (B, D), (0,)))
+    s = b.reduce(e, (1,), "sum")
+    p = e / b.broadcast(s, (B, D), (0,))
+    t = b.transpose(p, (1, 0))                         # (D, B): the break
+    _out = b.tanh(t) * 0.5
+    return b.module
+
+
 ALL_GRAPHS = {
     "LR": lr_graph,
     "W2V": w2v_graph,
@@ -216,4 +239,5 @@ ALL_GRAPHS = {
     "Stacked": stacked_transformer_graph,
     "ReduceTowers": reduce_towers_graph,
     "BcastHeavy": broadcast_towers_graph,
+    "StitchPipe": stitch_pipeline_graph,
 }

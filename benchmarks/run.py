@@ -251,7 +251,11 @@ def bench_fusion_planner():
         )
         # predicted reduction is the fusion pass's pre-demotion view
         # (planner_kernels); counted is what the final executable actually
-        # launches — they diverge when MemoryPass demotes members
+        # launches — they diverge when MemoryPass demotes members.  Both
+        # compare against the in-compile floor plan, NOT the separate
+        # planner="greedy" compile of the kernels row: on stitched graphs
+        # the floor already grows across schedule breaks, so the kernels
+        # row is the paper-exact comparison
         rows.append(
             (f"planner/{name}/launch_reduction", 0.0,
              f"predicted={s.greedy_kernels - s.planner_kernels} "
@@ -285,6 +289,37 @@ def bench_stitched_kernels():
     return rows
 
 
+def bench_stitching():
+    """Multi-phase stitched lowering: launches with stitching on vs off on
+    the schedule-break graph, plus per-graph phase/interface/pack counters
+    wherever the planner used the stitched machinery."""
+    from .graphs import stitch_pipeline_graph
+
+    rows = []
+    for name, (module, comp, lib) in compiled_all().items():
+        s = comp.stats
+        if s.stitch_lowered_kernels == 0 and s.planner_packs == 0:
+            continue
+        rows.append(
+            (f"stitch/{name}", 0.0,
+             f"lowered={s.stitch_lowered_kernels} "
+             f"phases={s.stitch_phases_total} "
+             f"iface_bytes={s.stitch_interface_bytes} "
+             f"packs={s.planner_packs}")
+        )
+    on = compiled_all()["StitchPipe"][1].stats
+    off = compile_module(
+        stitch_pipeline_graph(), replace(OPTS, enable_stitching=False)
+    ).stats
+    k_on = on.stitched_kernels + on.standalone_kernels
+    k_off = off.stitched_kernels + off.standalone_kernels
+    rows.append(
+        ("stitch/StitchPipe/launch_reduction", 0.0,
+         f"stitched={k_on} split={k_off} saved={k_off - k_on}")
+    )
+    return rows
+
+
 ALL_BENCHES = [
     bench_fusion_ratio,
     bench_speedup,
@@ -294,6 +329,7 @@ ALL_BENCHES = [
     bench_footprint,
     bench_compile_cache,
     bench_fusion_planner,
+    bench_stitching,
     bench_stitched_kernels,
 ]
 
@@ -311,7 +347,18 @@ def main(argv=None) -> None:
         help="also write rows as JSON (CI uploads this as an artifact)",
     )
     args = ap.parse_args(argv)
-    wanted = args.only.split(",") if args.only else None
+    wanted = None
+    if args.only is not None:
+        wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+        valid = [b.__name__ for b in ALL_BENCHES]
+        unknown = [
+            w for w in wanted if not any(w in name for name in valid)
+        ]
+        if not wanted or unknown:
+            ap.error(
+                f"--only matched nothing for {', '.join(sorted(unknown)) or args.only!r}; "
+                f"valid bench names: {', '.join(valid)}"
+            )
     rows = []
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:

@@ -32,17 +32,23 @@ def main():
               + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in s.pass_times.items()))
         print(f"    planner[{s.planner_mode}]: {s.plans_explored} plans explored "
               f"({s.plans_rejected} infeasible), {s.planner_splits} splits, "
-              f"{s.planner_merges} merges | modeled "
+              f"{s.planner_merges} merges, {s.planner_packs} packs, "
+              f"{s.planner_stitches} stitches | modeled "
               f"{s.planner_predicted_s * 1e6:.2f}us vs greedy "
               f"{s.greedy_predicted_s * 1e6:.2f}us | launches saved: "
               f"{s.launches_saved_vs_greedy} vs greedy, "
               f"{s.launches_saved_vs_unfused} vs unfused")
+        if s.stitch_lowered_kernels:
+            print(f"    stitched lowering: {s.stitch_lowered_kernels} kernels, "
+                  f"{s.stitch_phases_total} phases, "
+                  f"{s.stitch_interface_bytes}B staged interfaces")
         for r in s.reports:
             shared = f", {r.shared_bytes}B shared" if r.shared_bytes else ""
             shrunk = f", {r.num_shrinks} shrinks" if r.num_shrinks else ""
             cached = "  [cached]" if r.cached else ""
+            phases = f"  phases={r.num_phases}" if r.num_phases > 1 else ""
             print(f"    {r.name}: {r.num_ops:3d} ops  blocks={r.blocks:<4d} "
-                  f"scratch={r.scratch_bytes}B{shared}{shrunk}  "
+                  f"scratch={r.scratch_bytes}B{shared}{shrunk}{phases}  "
                   f"roots={','.join(r.roots)}{cached}")
 
 

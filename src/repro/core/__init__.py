@@ -33,18 +33,31 @@ from .ir import (
     apply_op,
     trace,
 )
-from .memory import MemoryInfeasible, MemoryPlan, plan_memory
+from .memory import (
+    MemoryInfeasible,
+    MemoryPlan,
+    StitchedMemoryPlan,
+    plan_memory,
+    plan_stitched_memory,
+)
 from .perf_library import CostModel, PerfLibrary, TPU_V5E, TpuSpec
 from .schedule import (
+    CONSISTENT,
+    INFEASIBLE,
     REPLICATED,
+    STITCHABLE,
     Sched,
     ScheduleSolution,
+    StitchedSolution,
+    StitchVerdict,
     Unsatisfiable,
     blocks_of,
     candidate_schedules,
     chunk_shape,
     propagate,
     resolve_schedules,
+    resolve_stitched,
+    stitchable,
 )
 from .span import compute_spans, critical_path_length, layers
 from .tuning import TunedPlan, tune
@@ -59,8 +72,11 @@ __all__ = [
     "FusionConfig", "FusionPlan", "FusionScorer", "PlannerStats", "deep_fuse",
     "DeviceSpec", "LatencyModel", "instr_flops", "GraphBuilder", "Instruction",
     "Module", "Tensor", "apply_op", "trace", "MemoryInfeasible", "MemoryPlan",
-    "plan_memory", "CostModel", "PerfLibrary", "TPU_V5E", "TpuSpec",
+    "plan_memory", "StitchedMemoryPlan", "plan_stitched_memory",
+    "CostModel", "PerfLibrary", "TPU_V5E", "TpuSpec",
     "REPLICATED", "Sched", "ScheduleSolution", "Unsatisfiable", "blocks_of",
+    "CONSISTENT", "STITCHABLE", "INFEASIBLE", "StitchVerdict",
+    "StitchedSolution", "resolve_stitched", "stitchable",
     "candidate_schedules", "chunk_shape", "propagate", "resolve_schedules",
     "compute_spans", "critical_path_length", "layers", "TunedPlan", "tune",
     "xla_baseline_groups", "xla_baseline_kernel_count",

@@ -40,11 +40,12 @@ except ImportError:  # pragma: no cover
 
 from .fusion import FusedComputation
 from .ir import Instruction, apply_op
-from .memory import ALLOC, INLINE, SHARE, MemoryPlan
+from .memory import ALLOC, INLINE, SHARE, MemoryPlan, StitchedMemoryPlan
 from .schedule import (
     REPLICATED,
     Sched,
     ScheduleSolution,
+    StitchedSolution,
     block_index,
     chunk_shape,
     propagate,
@@ -113,18 +114,30 @@ def _emit_instr(instr: Instruction, sched: Sched, ovals: List, b):
 
 @dataclass
 class StitchedKernel:
-    """A compiled stitched kernel: call with input arrays in ``inputs`` order."""
+    """A compiled stitched kernel: call with input arrays in ``inputs`` order.
+
+    Single-phase (schedule-consistent) kernels carry a ``solution``;
+    multi-phase stitched kernels carry a ``stitched`` solution instead and
+    ``solution`` is None.
+    """
 
     fusion: FusedComputation
-    solution: ScheduleSolution
-    plan: MemoryPlan
+    solution: Optional[ScheduleSolution]
+    plan: object                         # MemoryPlan | StitchedMemoryPlan
     fn: Callable
     inputs: List[Instruction]
     outputs: List[Instruction]
+    stitched: Optional[StitchedSolution] = None
 
     @property
     def blocks(self) -> int:
+        if self.stitched is not None:
+            return self.stitched.blocks
         return self.solution.blocks
+
+    @property
+    def num_phases(self) -> int:
+        return self.stitched.num_phases if self.stitched is not None else 1
 
     def __call__(self, *args):
         return self.fn(*args)
@@ -139,7 +152,7 @@ class StitchedKernel:
         """
         return StitchedKernel(
             fusion, self.solution, self.plan, self.fn,
-            fusion.inputs, fusion.roots,
+            fusion.inputs, fusion.roots, stitched=self.stitched,
         )
 
 
@@ -224,3 +237,141 @@ def emit_fusion(
         return outs if isinstance(outs, (list, tuple)) else (outs,)
 
     return StitchedKernel(fusion, solution, plan, fn, inputs, roots)
+
+
+# --------------------------------------------------------------------------
+# Multi-phase stitched emission: phases as sequential loops in ONE kernel
+# --------------------------------------------------------------------------
+
+
+def _full_spec(instr: Instruction) -> pl.BlockSpec:
+    """Whole-tensor BlockSpec: the block IS the array (grid is trivial)."""
+    shape = tuple(instr.shape)
+    return pl.BlockSpec(shape, lambda b, _n=len(shape): (0,) * _n)
+
+
+def _store_chunk(ref, instr: Instruction, sched: Sched, v, b: int):
+    """Write one block's value into a full-shape ref at static offsets."""
+    if sched.kind == "replicated" or not instr.shape:
+        ref[...] = v
+        return
+    starts = _starts(instr.shape, sched, b)
+    cs = chunk_shape(instr.shape, sched)
+    ref[tuple(slice(s, s + c) for s, c in zip(starts, cs))] = v
+
+
+def emit_stitched_fusion(
+    fusion: FusedComputation,
+    stitched: StitchedSolution,
+    plan: StitchedMemoryPlan,
+    interpret: bool = True,
+) -> StitchedKernel:
+    """Emit ONE Pallas kernel running every phase of a stitched group.
+
+    The launch grid is trivial — each phase's grid is lowered as a
+    *sequential loop* over that phase's own block schedule, unrolled at
+    trace time (phase grids are capped by ``stitch_max_blocks``).  Inputs
+    and outputs are whole-tensor blocks; every interface tensor is staged
+    FULLY in a VMEM scratch ref by its producer phase and re-tiled (sliced
+    per-block) by its consumer phases — shared-memory stitching across
+    schedule breaks, per the FusionStitching follow-up work.
+    """
+    if _VMEM is None:  # pragma: no cover - jax always ships pallas.tpu here
+        raise RuntimeError("stitched emission needs pallas TPU scratch spaces")
+    inputs = fusion.inputs
+    roots = fusion.roots
+
+    in_specs = [_full_spec(i) for i in inputs]
+    out_specs = [_full_spec(r) for r in roots]
+    out_shape = [jax.ShapeDtypeStruct(tuple(r.shape), r.dtype) for r in roots]
+
+    # scratch layout: interface staging buffers first, then each phase's
+    # chunk-granular slots at a per-phase offset
+    scratch_shapes = []
+    iface_slot: Dict[int, int] = {}
+    for iid, buf in plan.interfaces.items():
+        iface_slot[iid] = len(scratch_shapes)
+        scratch_shapes.append(_VMEM(tuple(buf.shape), np.dtype(buf.dtype)))
+    phase_offsets: List[int] = []
+    for pplan in plan.phase_plans:
+        phase_offsets.append(len(scratch_shapes))
+        for sshape, sdtype in pplan.slots:
+            scratch_shapes.append(_VMEM(tuple(sshape), np.dtype(sdtype)))
+
+    n_in, n_out = len(inputs), len(roots)
+    root_pos = {r.id: j for j, r in enumerate(roots)}
+
+    def kernel(*refs):
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in: n_in + n_out]
+        scratch = refs[n_in + n_out:]
+
+        global_vals: Dict[int, object] = {}
+        for i, instr in enumerate(inputs):
+            global_vals[instr.id] = in_refs[i][...]
+
+        for pk, phase in enumerate(stitched.phases):
+            assign = phase.solution.assignment
+            pplan = plan.phase_plans[pk]
+            off = phase_offsets[pk]
+            # staged interfaces this phase consumes, read back whole — only
+            # once their producer phase has fully run (same-phase consumers
+            # use the block-local value instead)
+            for m in phase.members:
+                for o in m.operands:
+                    if (
+                        o.id in iface_slot
+                        and o.id not in global_vals
+                        and plan.interfaces[o.id].produced_phase < pk
+                    ):
+                        global_vals[o.id] = scratch[iface_slot[o.id]][...]
+            for b in range(phase.solution.blocks):
+                vals: Dict[int, object] = {}
+                stored: Dict[int, Sched] = {}
+                for m in phase.members:
+                    sched = assign[m.id]
+                    if m.opcode == "constant":
+                        v = apply_op(m)
+                        sched = REPLICATED
+                    else:
+                        needed = propagate(m, sched)
+                        ovals = []
+                        for o, ns in zip(m.operands, needed):
+                            if o.id in vals:
+                                ov = _adapt(vals[o.id], o, stored[o.id], ns, b)
+                            else:
+                                # kernel input or staged interface: stored whole
+                                ov = _adapt(
+                                    global_vals[o.id], o, REPLICATED, ns, b
+                                )
+                            ovals.append(ov)
+                        v = _emit_instr(m, sched, ovals, b)
+                        entry = pplan.entries.get(m.id)
+                        if entry is not None and entry.action in (ALLOC, SHARE):
+                            ref = scratch[off + entry.slot]
+                            ref[...] = v
+                            v = ref[...]
+                    vals[m.id] = v
+                    stored[m.id] = sched
+                    if m.id in iface_slot:
+                        _store_chunk(scratch[iface_slot[m.id]], m, sched, v, b)
+                    if m.id in root_pos:
+                        _store_chunk(out_refs[root_pos[m.id]], m, sched, v, b)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )
+
+    def fn(*args):
+        outs = call(*args)
+        return outs if isinstance(outs, (list, tuple)) else (outs,)
+
+    return StitchedKernel(
+        fusion, None, plan, fn, inputs, roots, stitched=stitched
+    )

@@ -39,6 +39,19 @@ class StitchOptions:
     # "cost": candidate-plan exploration under the shared LatencyModel with
     # the greedy result as the floor; "greedy": the paper's Algorithm 1.
     planner: str = "cost"
+    # Multi-phase stitching (arXiv:1911.11576 / 2009.10924): groups with no
+    # single consistent schedule lower as ONE kernel of sequential phases
+    # stitched through full VMEM staging buffers, and the planner may pack
+    # independent same-layer sink towers into one kernel.  Effective only
+    # with planner="cost" — planner="greedy" stays the paper's hard veto.
+    enable_stitching: bool = True
+    # Replicate limit inside stitched phases (None = vmem_limit): a phase's
+    # working set lives in VMEM staging, so replication is bounded by the
+    # stitched memory plan rather than the per-block limit above.
+    stitch_replicate_limit: Optional[int] = None
+    # Cap on any ONE phase's grid: phases lower as sequential (trace-time
+    # unrolled) loops inside the kernel, so this bounds emitted code size.
+    stitch_max_blocks: int = 64
 
 
 @dataclass
@@ -53,6 +66,8 @@ class FusionReport:
     roots: List[str]
     cached: bool = False                     # kernel reused via signature
     signature: str = ""
+    num_phases: int = 1                      # >1 = multi-phase stitched kernel
+    interface_bytes: int = 0                 # staged phase-boundary buffers
 
 
 @dataclass
@@ -78,9 +93,17 @@ class CompileStats:
     plans_rejected: int = 0                  # candidates with no feasible plan
     planner_splits: int = 0                  # seeds committed non-greedily
     planner_merges: int = 0                  # horizontal merges applied
+    planner_packs: int = 0                   # sink groups committed as one kernel
+    planner_stitches: int = 0                # groups committed as multi-phase
+    # stitched-lowering accounting (the README "stitching counters")
+    stitch_lowered_kernels: int = 0          # instances using the stitched emitter
+    stitch_phases_total: int = 0             # sum of phases over stitched instances
+    stitch_interface_bytes: int = 0          # staged interface bytes, all instances
     planner_predicted_s: float = 0.0         # modeled latency, committed plan
-    greedy_predicted_s: float = 0.0          # modeled latency, greedy floor
-    greedy_kernels: int = 0                  # launches the greedy plan needs
+    # "greedy" here = the planner's same-regime floor (see PlannerStats);
+    # on stitched graphs it differs from a paper-exact planner="greedy" run
+    greedy_predicted_s: float = 0.0          # modeled latency, floor plan
+    greedy_kernels: int = 0                  # launches the floor plan needs
     planner_kernels: int = 0                 # fusion-pass view, pre-demotion
     unfused_kernels: int = 0                 # launches with no fusion at all
 
@@ -145,16 +168,24 @@ def build_outputs(state: CompilationState) -> None:
     reports: List[FusionReport] = []
     predicted = 0.0
     final_fusions = []
+    stitched_instances = 0
+    stitch_phases_total = 0
+    stitch_iface_bytes = 0
     for p in state.planned:
         kernels[p.fusion.name] = p.kernel
         final_fusions.append(p.fusion)
         predicted += p.entry.cost_s
         mem = p.entry.memory
+        st = p.entry.stitched
+        if st is not None:
+            stitched_instances += 1
+            stitch_phases_total += st.num_phases
+            stitch_iface_bytes += st.interface_bytes
         reports.append(
             FusionReport(
                 p.fusion.name,
                 len(p.fusion.members),
-                p.entry.solution.blocks,
+                p.entry.blocks,
                 p.entry.cost_s,
                 mem.total_bytes,
                 mem.shared_bytes,
@@ -162,6 +193,8 @@ def build_outputs(state: CompilationState) -> None:
                 [r.name for r in p.fusion.roots],
                 cached=p.cache_hit,
                 signature=p.entry.signature,
+                num_phases=st.num_phases if st is not None else 1,
+                interface_bytes=st.interface_bytes if st is not None else 0,
             )
         )
 
@@ -214,6 +247,11 @@ def build_outputs(state: CompilationState) -> None:
         plans_rejected=pstats.plans_rejected if pstats else 0,
         planner_splits=pstats.splits_taken if pstats else 0,
         planner_merges=pstats.merges_taken if pstats else 0,
+        planner_packs=pstats.packs_taken if pstats else 0,
+        planner_stitches=pstats.stitches_taken if pstats else 0,
+        stitch_lowered_kernels=stitched_instances,
+        stitch_phases_total=stitch_phases_total,
+        stitch_interface_bytes=stitch_iface_bytes,
         planner_predicted_s=pstats.predicted_s if pstats else 0.0,
         greedy_predicted_s=pstats.greedy_predicted_s if pstats else 0.0,
         greedy_kernels=pstats.greedy_kernels if pstats else 0,

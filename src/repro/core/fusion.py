@@ -28,6 +28,18 @@ model says the saved launches beat the packing cost.  The greedy result is
 always in the candidate set, so the planner is never worse than greedy
 *under the model* (the floor property; tested in ``tests/test_planner.py``).
 ``planner == "greedy"`` reproduces the paper's original behavior exactly.
+
+**Stitching (arXiv:1911.11576 / 2009.10924):** the
+injected SchdConsistent callable now accepts groups whose only lowering is
+a multi-phase *stitched* kernel (``schedule.stitchable``'s three-way
+verdict), the scorer charges those through
+``LatencyModel.stitched_fusion_time``, committed stitched groups carry
+their phase structure in ``FusedComputation.stitch_phases`` (which salts
+the fusion signature), and independent same-layer sink towers are grown
+separately then scored as ONE *packed* kernel against the per-tower floor
+(``_sink_pack_groups`` / ``_choose_pack``) — the ReduceTowers/BcastHeavy
+pathology reaches a single kernel at planning time instead of relying on
+the horizontal-merge post-pass.
 """
 from __future__ import annotations
 
@@ -36,8 +48,8 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .ir import Instruction, Module
 from .latency import LatencyModel
-from .memory import MemoryInfeasible, plan_memory
-from .schedule import any_satisfiable
+from .memory import MemoryInfeasible, plan_memory, plan_stitched_memory
+from .schedule import CONSISTENT, STITCHABLE, StitchVerdict, stitchable
 from . import span as span_lib
 
 # Opcodes that may live inside a fused computation.
@@ -88,6 +100,11 @@ class FusedComputation:
     members: List[Instruction]           # topological order
     name: str = "fusion"
     modeled_cost_s: Optional[float] = None   # planner's LatencyModel estimate
+    # Phase structure (member count per phase) when the planner committed
+    # this group as a multi-phase stitched lowering; None = single-schedule.
+    # Salts the fusion signature so stitched and split lowerings never alias
+    # in the kernel cache.
+    stitch_phases: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         ids = {m.id for m in self.members}
@@ -136,10 +153,18 @@ class PlannerStats:
     plans_rejected: int = 0        # candidates with no feasible schedule/memory
     splits_taken: int = 0          # seeds committed as a non-greedy partition
     merges_taken: int = 0          # horizontal merges applied
-    greedy_kernels: int = 0        # kernels the pure-greedy plan would launch
+    packs_taken: int = 0           # sink groups committed as ONE packed kernel
+    stitches_taken: int = 0        # groups committed with multi-phase lowering
+    # The "greedy floor": per-seed whole-group commits under the SAME
+    # consistency regime as the planner (including stitching when enabled).
+    # This is the plan the floor property guarantees we never exceed.  It is
+    # NOT the paper-exact greedy on stitched graphs — there a seed grows
+    # across breaks that planner="greedy" would refuse, so compile with
+    # planner="greedy" (as bench_fusion_planner does) for that comparison.
+    greedy_kernels: int = 0        # kernels the floor plan would launch
     planned_kernels: int = 0       # kernels the committed plan launches
     predicted_s: float = 0.0       # modeled latency of the committed plan
-    greedy_predicted_s: float = 0.0  # modeled latency of the greedy plan (floor)
+    greedy_predicted_s: float = 0.0  # modeled latency of the floor plan
 
     @property
     def launches_saved_vs_greedy(self) -> int:
@@ -179,6 +204,10 @@ class FusionConfig:
     # the greedy result as the floor).  "greedy": the paper's Algorithm 1
     # accept/reject, exactly as before.
     planner: str = "cost"
+    # Multi-phase stitching (arXiv:1911.11576 / 2009.10924): lets the cost
+    # planner pack independent same-layer sinks into one kernel and commit
+    # groups with no single consistent schedule as phase-stitched lowerings.
+    enable_stitching: bool = True
     # Scorer shared with the rest of the compile (built from the pipeline's
     # PerfLibrary model + StitchOptions limits); a default one is
     # constructed when the planner runs without a pipeline.
@@ -194,10 +223,13 @@ class FusionScorer:
     """Scores candidate partitions for the cost-guided planner.
 
     Feasibility uses the same machinery the pipeline's consistency checker
-    uses (``any_satisfiable`` + ``plan_memory``); the time estimate is the
-    shared ``LatencyModel``.  Scores are memoized by member-id frozenset —
-    candidate partitions overlap heavily (the greedy group reappears inside
-    every merge attempt).
+    uses (the three-way ``stitchable`` verdict + the matching memory plan);
+    the time estimate is the shared ``LatencyModel`` — ``fusion_time`` for
+    schedule-consistent groups, ``stitched_fusion_time`` (which charges the
+    interface staging traffic and phase-loop overhead) for groups that only
+    lower as multi-phase stitched kernels.  Scores are memoized by member-id
+    frozenset — candidate partitions overlap heavily (the greedy group
+    reappears inside every merge attempt).
     """
 
     def __init__(
@@ -206,15 +238,50 @@ class FusionScorer:
         replicate_limit: int = 512 * 1024,
         max_blocks: int = 4096,
         vmem_limit: int = 4 * 1024 * 1024,
+        allow_stitch: bool = True,
+        stitch_replicate_limit: Optional[int] = None,
+        stitch_max_blocks: int = 64,
     ):
         self.model = model or LatencyModel()
         self.replicate_limit = replicate_limit
         self.max_blocks = max_blocks
         self.vmem_limit = vmem_limit
+        self.allow_stitch = allow_stitch
+        self.stitch_replicate_limit = (
+            vmem_limit if stitch_replicate_limit is None else stitch_replicate_limit
+        )
+        self.stitch_max_blocks = stitch_max_blocks
         self._memo: Dict[frozenset, Optional[float]] = {}
+        self._verdicts: Dict[frozenset, StitchVerdict] = {}
 
     def standalone_cost(self, instr: Instruction) -> float:
         return self.model.standalone_time(instr)
+
+    def verdict(self, members: List[Instruction]) -> StitchVerdict:
+        """Memoized three-way schedule verdict for a member set."""
+        key = frozenset(m.id for m in members)
+        if key not in self._verdicts:
+            roots = FusedComputation(list(members), name="candidate").roots
+            self._verdicts[key] = stitchable(
+                roots,
+                members,
+                replicate_limit=self.replicate_limit,
+                max_blocks=self.max_blocks,
+                stitch_replicate_limit=self.stitch_replicate_limit,
+                stitch_max_blocks=self.stitch_max_blocks,
+                allow_stitch=self.allow_stitch,
+            )
+        return self._verdicts[key]
+
+    def stitch_phases_for(
+        self, members: List[Instruction]
+    ) -> Optional[Tuple[int, ...]]:
+        """Phase structure the committed group will lower with, or None for
+        single-schedule groups.  Only consults the memo — never solves."""
+        v = self._verdicts.get(frozenset(m.id for m in members))
+        if v is not None and v.verdict == STITCHABLE and v.stitched is not None:
+            return v.stitched.phase_sizes
+        return None
 
     def fused_cost(self, members: List[Instruction]) -> Optional[float]:
         """Modeled seconds for ``members`` as ONE kernel; None = infeasible."""
@@ -228,19 +295,20 @@ class FusionScorer:
             return self.standalone_cost(members[0])
         fusion = FusedComputation(list(members), name="candidate")
         roots = fusion.roots
-        sol = any_satisfiable(
-            members,
-            roots,
-            replicate_limit=self.replicate_limit,
-            max_blocks=self.max_blocks,
-        )
-        if sol is None:
-            return None
-        try:
-            plan_memory(members, roots, sol, self.vmem_limit)
-        except MemoryInfeasible:
-            return None
-        return self.model.fusion_time(members, roots, sol)
+        v = self.verdict(members)
+        if v.verdict == CONSISTENT:
+            try:
+                plan_memory(members, roots, v.solution, self.vmem_limit)
+            except MemoryInfeasible:
+                return None
+            return self.model.fusion_time(members, roots, v.solution)
+        if v.verdict == STITCHABLE:
+            try:
+                plan_stitched_memory(v.stitched, self.vmem_limit)
+            except MemoryInfeasible:
+                return None
+            return self.model.stitched_fusion_time(v.stitched)
+        return None
 
     def partition_cost(
         self, groups: List[List[Instruction]]
@@ -465,6 +533,92 @@ def _choose_partition(
     return best_groups, list(best_costs)
 
 
+def _commit_fusion(
+    g: List[Instruction],
+    name: str,
+    cost: Optional[float],
+    scorer: Optional[FusionScorer],
+) -> FusedComputation:
+    """Build a committed FusedComputation, marking the phase structure when
+    the scorer's verdict said the group lowers as a multi-phase stitch."""
+    fc = FusedComputation(g, name=name, modeled_cost_s=cost)
+    if scorer is not None and len(g) > 1:
+        fc.stitch_phases = scorer.stitch_phases_for(g)
+    return fc
+
+
+def _sink_pack_groups(
+    layer: List[Instruction],
+    assigned: Set[int],
+    claimed: Set[int],
+    cfg: FusionConfig,
+) -> List[List[Instruction]]:
+    """Independent same-layer non-elementwise sinks with matching output
+    (shape, dtype), e.g. N reduce towers or N reshape-terminated towers.
+    ElementwiseFusion never groups these (its seeds are elementwise), so
+    greedy commits one kernel per sink; the planner grows each sink's tower
+    separately and then scores the union as ONE packed kernel against the
+    per-tower floor (the stitch-across-break / pack candidate)."""
+    by_key: Dict[tuple, List[Instruction]] = {}
+    for instr in layer:
+        if instr.id in assigned or instr.id in claimed:
+            continue
+        if instr.is_elementwise or instr.opcode in ("parameter", "constant", "iota"):
+            continue
+        if constant_like(instr) or not fusable_member(instr, cfg.fuse_dot):
+            continue
+        by_key.setdefault((tuple(instr.shape), str(instr.dtype)), []).append(instr)
+    return [
+        g
+        for _, g in sorted(by_key.items(), key=lambda kv: str(kv[0]))
+        if len(g) >= 2
+    ]
+
+
+def _choose_pack(
+    towers: List[List[Instruction]],
+    module: Module,
+    scorer: FusionScorer,
+    cfg: FusionConfig,
+    stats: PlannerStats,
+) -> Tuple[List[List[Instruction]], List[Optional[float]]]:
+    """Commit a sink-pack group: either the union of all towers as ONE
+    kernel, or each tower's own best partition (the greedy floor)."""
+    groups: List[List[Instruction]] = []
+    costs: List[Optional[float]] = []
+    splits_before = stats.splits_taken
+    for t in towers:
+        g, c = _choose_partition(t, scorer, cfg, stats)
+        groups.extend(g)
+        costs.extend(c)
+    if len(towers) < 2 or any(c is None for c in costs):
+        return groups, costs
+    union = set()
+    for t in towers:
+        union.update(t)
+    if _group_cycle(union):
+        return groups, costs
+    packed = _topo_sorted(union, module)
+    if len(packed) > cfg.max_fusion_ops:
+        return groups, costs
+    if (
+        FusedComputation(packed, name="candidate").footprint_bytes()
+        > cfg.ew_footprint_limit
+    ):
+        return groups, costs
+    stats.plans_explored += 1
+    cost = scorer.fused_cost(packed)
+    if cost is None or not _consistent_partition([packed], cfg):
+        stats.plans_rejected += 1
+        return groups, costs
+    if cost < sum(costs):
+        stats.packs_taken += 1
+        # the per-tower partitions (and any splits they took) are discarded
+        stats.splits_taken = splits_before
+        return [packed], [cost]
+    return groups, costs
+
+
 def _group_cycle(fused: Set[Instruction]) -> bool:
     """Would the member union reach itself through outside instructions?"""
     stack = [u for m in fused for u in m.users if u not in fused]
@@ -543,8 +697,8 @@ def _horizontal_merge(
                     if not _consistent_partition([merged_members], cfg):
                         stats.plans_rejected += 1
                         continue
-                    merged = FusedComputation(
-                        merged_members, name=a.name, modeled_cost_s=cost
+                    merged = _commit_fusion(
+                        merged_members, a.name, cost, scorer
                     )
                     fusions[idxs[ai]] = merged
                     fusions[idxs[bi]] = None
@@ -587,6 +741,12 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
         # -- step 1: intra-layer ElementwiseFusion ------------------------
         seeds: List[List[Instruction]] = _elementwise_groups(layer, assigned, cfg)
         claimed = {i.id for g in seeds for i in g}
+        # -- step 1.5: horizontal sink packs (cost planner + stitching) ---
+        packs: List[List[Instruction]] = []
+        if scorer is not None and cfg.enable_stitching:
+            packs = _sink_pack_groups(layer, assigned, claimed, cfg)
+            for g in packs:
+                claimed.update(i.id for i in g)
         # -- step 2: every remaining fusable instruction seeds Algorithm 1
         for instr in layer:
             if instr.id in assigned or instr.id in claimed:
@@ -615,7 +775,31 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
             groups, costs = _choose_partition(members, scorer, cfg, stats)
             for g, c in zip(groups, costs):
                 fusions.append(
-                    FusedComputation(g, name=f"f{len(fusions)}", modeled_cost_s=c)
+                    _commit_fusion(g, f"f{len(fusions)}", c, scorer)
+                )
+
+        # -- step 3: sink-pack groups — grow each tower exactly as greedy
+        # would (one seed per sink), then score the union as ONE kernel
+        for group in packs:
+            towers: List[List[Instruction]] = []
+            for sink in group:
+                if not cfg.consistency([sink], [sink]):
+                    assigned.add(sink.id)
+                    forced_standalone.append(sink)
+                    continue
+                t = subgraph_fuse(
+                    [sink], module, span, layer_map, roof, assigned, cfg
+                )
+                for m in t:
+                    assigned.add(m.id)
+                towers.append(t)
+                greedy_fusion_count += 1
+            if not towers:
+                continue
+            groups, costs = _choose_pack(towers, module, scorer, cfg, stats)
+            for g, c in zip(groups, costs):
+                fusions.append(
+                    _commit_fusion(g, f"f{len(fusions)}", c, scorer)
                 )
 
     # --- horizontal-merge post-pass (cost mode only) ---------------------
@@ -640,6 +824,7 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
                 _topo_sorted(members, module),
                 name=f.name,
                 modeled_cost_s=f.modeled_cost_s,
+                stitch_phases=f.stitch_phases,
             )
         )
     fusions = absorbed_fusions
@@ -669,6 +854,9 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
     # count is one fusion per committed seed plus that shared remainder.
     stats.planned_kernels = plan.num_kernels
     stats.greedy_kernels = greedy_fusion_count + len(shared_standalone)
+    stats.stitches_taken = sum(
+        1 for f in plan.fusions if f.stitch_phases is not None
+    )
     if scorer is not None:
         shared_cost = sum(
             scorer.standalone_cost(s) for s in shared_standalone

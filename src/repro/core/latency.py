@@ -39,7 +39,14 @@ from typing import Sequence, Tuple
 import numpy as np
 
 from .ir import Instruction
-from .schedule import REPLICATED, Sched, ScheduleSolution, blocks_of, chunk_shape
+from .schedule import (
+    REPLICATED,
+    Sched,
+    ScheduleSolution,
+    StitchedSolution,
+    blocks_of,
+    chunk_shape,
+)
 
 
 @dataclass(frozen=True)
@@ -60,6 +67,7 @@ class DeviceSpec:
     ici_bw: float = 50e9                     # per link
     launch_overhead_s: float = 2.0e-6        # kernel dispatch
     grid_step_overhead_s: float = 1.0e-7     # per grid program (pipelined)
+    phase_loop_overhead_s: float = 5.0e-7    # per stitched-phase transition
     sublane: int = 8
     lane: int = 128
 
@@ -241,6 +249,57 @@ class LatencyModel:
             + blocks * spec.grid_step_overhead_s
             + body
         )
+
+    def stitched_fusion_time(self, stitched: StitchedSolution) -> float:
+        """ONE multi-phase stitched kernel (schedule.resolve_stitched).
+
+        Charges a single launch, then per phase: the phase body (same terms
+        as ``fusion_time``), the phase's sequential grid-loop steps, and a
+        ``phase_loop_overhead_s`` transition.  Interface tensors are charged
+        a full write + read round trip through VMEM — the staging traffic
+        that replaces an HBM round trip plus a kernel launch under a split.
+        Phases are sequential: no overlap is assumed across them.
+        """
+        spec = self.spec
+        group_ids = {m.id for p in stitched.phases for m in p.members}
+        total = spec.launch_overhead_s
+        seen_inputs = set()
+        for p in stitched.phases:
+            blocks = max(1, p.solution.blocks)
+            phase_ids = {m.id for m in p.members}
+            compute_s = 0.0
+            hbm_bytes = 0.0
+            vmem_bytes = 0.0
+            for m in p.members:
+                sched = p.solution.assignment.get(m.id, REPLICATED)
+                dup = blocks if (blocks > 1 and sched.kind == "replicated") else 1
+                if not is_trivial(m):
+                    eff = _lane_efficiency(chunk_shape(m.shape, sched), spec)
+                    compute_s += dup * instr_flops(m) / (self.peak_for(m) * eff)
+                for o in m.operands:
+                    if o.id in group_ids or o.id in seen_inputs:
+                        continue   # phase-local, staged, or already-read input
+                    seen_inputs.add(o.id)
+                    # stitched kernels read every input exactly ONCE as a
+                    # whole-tensor block (grid is trivial); unlike
+                    # fusion_time there is no per-block re-read to charge
+                    hbm_bytes += o.bytesize
+                if not m.users or any(u.id not in group_ids for u in m.users):
+                    hbm_bytes += m.bytesize          # kernel output
+                elif m.opcode in ("reduce", "dot") and any(
+                    u.id in phase_ids for u in m.users
+                ):
+                    vmem_bytes += dup * m.bytesize   # phase-interior buffer
+            total += (
+                max(compute_s, hbm_bytes / spec.hbm_bw)
+                + vmem_bytes / spec.vmem_bw
+                + blocks * spec.grid_step_overhead_s
+                + spec.phase_loop_overhead_s
+            )
+        # interface staging: one full write by the producer phase, one full
+        # re-tiled read by the consumer phase, both through VMEM
+        total += 2.0 * stitched.interface_bytes / spec.vmem_bw
+        return total
 
     # ---- module-level roofline terms (launch/roofline.py) ----------------
     def compute_time(self, flops: float, chips: int = 1) -> float:

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from .ir import Instruction
-from .schedule import ScheduleSolution, chunk_shape
+from .schedule import ScheduleSolution, StitchedSolution, chunk_shape
 
 ALLOC = "ALLOC"
 SHARE = "SHARE"
@@ -268,3 +268,135 @@ def plan_memory(
             entries[m.id] = BufferEntry(INLINE)
 
     return MemoryPlan(entries, slots, total, shared, shrunk)
+
+
+# --------------------------------------------------------------------------
+# Stitched (multi-phase) planning: full interface buffers + per-phase scratch
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class InterfaceBuffer:
+    """One staged phase-boundary tensor, materialized WHOLE in VMEM."""
+
+    slot: int
+    shape: Tuple[int, ...]
+    dtype: object
+    nbytes: int
+    produced_phase: int
+    last_consumer_phase: int
+
+
+@dataclass
+class StitchedMemoryPlan:
+    """VMEM plan for a multi-phase stitched kernel.
+
+    Interface tensors are allocated at FULL (untiled) size — the producer
+    phase writes each block's chunk into the staging buffer and the consumer
+    phase re-tiles it under its own schedule.  Each phase additionally gets
+    its own chunk-granular ``MemoryPlan`` for phase-interior buffering.
+
+    Feasibility matches what ``emit_stitched_fusion`` actually allocates:
+    every interface buffer AND every phase's scratch slots are passed to one
+    ``pallas_call`` and coexist for the whole kernel, so the budget is
+    consumed sequentially — each phase plans (and shrinks) against whatever
+    the interfaces and earlier phases left over.  ``MemoryInfeasible``
+    propagates back to the fusion pass so infeasible stitches fall back to
+    a split.
+    """
+
+    interfaces: Dict[int, InterfaceBuffer]     # instr id -> staged buffer
+    phase_plans: List[MemoryPlan]
+    interface_bytes: int
+    io_bytes: int = 0        # whole-tensor input/output blocks (trivial grid)
+
+    @property
+    def num_phases(self) -> int:
+        return len(self.phase_plans)
+
+    # ---- MemoryPlan-compatible reporting surface -------------------------
+    @property
+    def total_bytes(self) -> int:
+        """Whole-kernel VMEM residency: interfaces + every phase's slots
+        (they all coexist in the one pallas_call's scratch set)."""
+        return self.interface_bytes + sum(p.total_bytes for p in self.phase_plans)
+
+    @property
+    def shared_bytes(self) -> int:
+        return sum(p.shared_bytes for p in self.phase_plans)
+
+    @property
+    def num_shrinks(self) -> int:
+        return sum(p.num_shrinks for p in self.phase_plans)
+
+    @property
+    def shared_ratio(self) -> float:
+        return self.shared_bytes / self.total_bytes if self.total_bytes else 0.0
+
+
+def plan_stitched_memory(
+    stitched: StitchedSolution,
+    vmem_limit: int = 4 * 1024 * 1024,
+) -> StitchedMemoryPlan:
+    """Plan VMEM for a stitched kernel: one full-size staging buffer per
+    interface tensor plus one chunk-granular plan per phase, checked against
+    ``vmem_limit`` as ONE allocation together with the whole-tensor kernel
+    input/output blocks — exactly the VMEM working set the stitched emitter
+    hands to ``pallas_call`` (trivial grid, full BlockSpecs)."""
+    phase_of: Dict[int, int] = {}
+    for k, p in enumerate(stitched.phases):
+        for m in p.members:
+            phase_of[m.id] = k
+
+    interfaces: Dict[int, InterfaceBuffer] = {}
+    for slot, i in enumerate(stitched.interfaces):
+        last = max(
+            (phase_of[u.id] for u in i.users if u.id in phase_of),
+            default=phase_of[i.id],
+        )
+        interfaces[i.id] = InterfaceBuffer(
+            slot=slot,
+            shape=tuple(i.shape),
+            dtype=i.dtype,
+            nbytes=int(i.bytesize),
+            produced_phase=phase_of[i.id],
+            last_consumer_phase=last,
+        )
+
+    # the stitched emitter's trivial grid gives every kernel input and every
+    # kernel output a WHOLE-tensor BlockSpec, so those blocks are VMEM-
+    # resident for the entire kernel too (unlike the chunk-sized blocks of a
+    # schedule-consistent kernel) — they must come out of the same budget
+    group_ids = set(phase_of)
+    io_bytes = 0
+    seen_io = set()
+    for p in stitched.phases:
+        for m in p.members:
+            for o in m.operands:
+                if o.id not in group_ids and o.id not in seen_io:
+                    seen_io.add(o.id)
+                    io_bytes += int(o.bytesize)
+            if m.id not in seen_io and (
+                not m.users or any(u.id not in group_ids for u in m.users)
+            ):
+                seen_io.add(m.id)
+                io_bytes += int(m.bytesize)
+
+    iface_bytes = sum(b.nbytes for b in interfaces.values())
+    if iface_bytes + io_bytes > vmem_limit:
+        raise MemoryInfeasible(
+            f"staged interfaces ({iface_bytes}B) + whole-tensor kernel I/O "
+            f"({io_bytes}B) > {vmem_limit}B budget"
+        )
+    phase_plans: List[MemoryPlan] = []
+    remaining = vmem_limit - iface_bytes - io_bytes
+    for p in stitched.phases:
+        # every phase's slots coexist with the interfaces and with every
+        # other phase's slots for the whole kernel, so each phase plans
+        # (and shrinks) against what earlier phases left over; a phase
+        # whose REQUIRED buffers exceed that raises MemoryInfeasible
+        plan = plan_memory(p.members, p.roots, p.solution, remaining)
+        phase_plans.append(plan)
+        remaining -= plan.total_bytes
+
+    return StitchedMemoryPlan(interfaces, phase_plans, iface_bytes, io_bytes)

@@ -24,7 +24,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from .codegen import StitchedKernel, emit_fusion
+from .codegen import StitchedKernel, emit_fusion, emit_stitched_fusion
 from .fusion import (
     FusedComputation,
     FusionConfig,
@@ -33,9 +33,16 @@ from .fusion import (
     deep_fuse,
 )
 from .ir import Instruction, Module
-from .memory import MemoryInfeasible, plan_memory
+from .memory import MemoryInfeasible, plan_memory, plan_stitched_memory
 from .perf_library import PerfLibrary
-from .schedule import Unsatisfiable, any_satisfiable, resolve_schedules
+from .schedule import (
+    CONSISTENT,
+    PhaseSolution,
+    Unsatisfiable,
+    resolve_schedules,
+    resolve_stitched,
+    stitchable,
+)
 from .signature import CacheEntry, KernelCache, fusion_signature
 from .tuning import TunedPlan, score, tune
 
@@ -105,21 +112,7 @@ class FusionPass(Pass):
 
     def run(self, state: CompilationState) -> None:
         opts = state.options
-
-        def consistency(roots, members) -> bool:
-            sol = any_satisfiable(
-                members,
-                roots,
-                replicate_limit=opts.replicate_limit,
-                max_blocks=opts.max_blocks,
-            )
-            if sol is None:
-                return False
-            try:
-                plan_memory(members, roots, sol, opts.vmem_limit)
-            except MemoryInfeasible:
-                return False
-            return True
+        srl = _stitch_replicate_limit(opts)
 
         scorer = None
         if opts.planner == "cost":
@@ -130,7 +123,43 @@ class FusionPass(Pass):
                 replicate_limit=opts.replicate_limit,
                 max_blocks=opts.max_blocks,
                 vmem_limit=opts.vmem_limit,
+                allow_stitch=opts.enable_stitching,
+                stitch_replicate_limit=srl,
+                stitch_max_blocks=opts.stitch_max_blocks,
             )
+
+        if scorer is not None:
+            def consistency(roots, members) -> bool:
+                # delegate to the scorer: same three-way verdict + memory
+                # feasibility (incl. the stitched interface budget, so
+                # over-budget stitches fall back to a split), memoized by
+                # member-id frozenset — growth probes the same sets the
+                # partition scoring later reuses.  Singletons must be
+                # CONSISTENT outright: a lone op whose only schedule is the
+                # stitched degenerate one cannot lower as a one-member
+                # stitched kernel and would only be demoted later.
+                if len(members) == 1:
+                    return scorer.verdict(members).verdict == CONSISTENT
+                return scorer.fused_cost(members) is not None
+        else:
+            def consistency(roots, members) -> bool:
+                # planner="greedy" reproduces the paper's Algorithm 1
+                # exactly: the boolean SchdConsistent veto, no stitching
+                v = stitchable(
+                    roots,
+                    members,
+                    replicate_limit=opts.replicate_limit,
+                    max_blocks=opts.max_blocks,
+                    allow_stitch=False,
+                )
+                if v.verdict != CONSISTENT:
+                    return False
+                try:
+                    plan_memory(members, roots, v.solution, opts.vmem_limit)
+                except MemoryInfeasible:
+                    return False
+                return True
+
         fcfg = FusionConfig(
             fuse_dot=opts.fuse_dot,
             ew_footprint_limit=opts.ew_footprint_limit,
@@ -138,6 +167,7 @@ class FusionPass(Pass):
             consistency=consistency,
             planner=opts.planner,
             scorer=scorer,
+            enable_stitching=opts.enable_stitching,
             # the consistency closure above IS the scorer's feasibility
             # check under the same limits — don't solve everything twice
             scorer_covers_consistency=scorer is not None,
@@ -145,16 +175,29 @@ class FusionPass(Pass):
         state.fusion_plan = deep_fuse(state.module, fcfg)
 
 
+def _stitch_replicate_limit(opts) -> int:
+    """Resolved stitched-phase replicate limit (None = the VMEM budget);
+    an explicit 0 means "no relaxed replication" and is honored."""
+    if opts.stitch_replicate_limit is None:
+        return opts.vmem_limit
+    return opts.stitch_replicate_limit
+
+
 def _options_fingerprint(opts) -> str:
     """Compile-options salt for cache keys: a kernel tuned/emitted under one
-    (interpret, memory-budget, blocks, planner) regime must never serve a
-    compile running under another, even through a shared or persistent
-    cache.  The planner mode is part of the fingerprint because the planner
-    decides *partitions*: a signature that names a greedy-built structure
-    must not resurrect under a differently-partitioned compile."""
+    (interpret, memory-budget, blocks, planner, stitching) regime must never
+    serve a compile running under another, even through a shared or
+    persistent cache.  The planner mode is part of the fingerprint because
+    the planner decides *partitions*: a signature that names a greedy-built
+    structure must not resurrect under a differently-partitioned compile.
+    The stitching options are part of it because they decide *phases*: a
+    stitched lowering must never serve a stitching-disabled compile (the
+    phase structure itself additionally salts ``fusion_signature``)."""
+    srl = _stitch_replicate_limit(opts)
     return (
         f"i{int(opts.interpret)}:v{opts.vmem_limit}:r{opts.replicate_limit}"
-        f":b{opts.max_blocks}:p{opts.planner}:"
+        f":b{opts.max_blocks}:p{opts.planner}"
+        f":st{int(opts.enable_stitching)}:sb{opts.stitch_max_blocks}:sr{srl}:"
     )
 
 
@@ -182,7 +225,19 @@ class SchedulePass(Pass):
                     continue
             tuned, from_disk = self._tune(state, fusion, sig)
             if tuned is None:
-                state.demoted.extend(fusion.members)
+                entry = None
+                if (
+                    opts.enable_stitching
+                    and opts.planner == "cost"
+                    and len(fusion.members) > 1
+                ):
+                    entry = self._tune_stitched(state, fusion, sig)
+                if entry is None:
+                    state.demoted.extend(fusion.members)
+                    continue
+                if opts.dedup_kernels:
+                    cache.put(entry)
+                state.planned.append(PlannedFusion(fusion, entry, True))
                 continue
             roots = fusion.roots
             entry = CacheEntry(
@@ -223,6 +278,50 @@ class SchedulePass(Pass):
         )
         return tuned, False
 
+    def _tune_stitched(self, state, fusion, sig) -> Optional[CacheEntry]:
+        """No single schedule exists: resolve a multi-phase stitched plan and
+        improve each phase's schedule with the performance library (the
+        per-phase analogue of §4.3 tuning; phases whose only schedule needs
+        the relaxed replicate limit keep the resolver's solution).
+
+        This deliberately re-solves rather than reusing the fusion-pass
+        scorer's solution: constant-like absorption extends the member list
+        after planning, so the lowered phase structure must be derived from
+        the FINAL members (``stitch_phases`` stays the planner's
+        pre-absorption hint — a deterministic signature salt, not the
+        lowering)."""
+        opts = state.options
+        members, roots = fusion.members, fusion.roots
+        srl = _stitch_replicate_limit(opts)
+        st = resolve_stitched(
+            members,
+            roots,
+            replicate_limit=opts.replicate_limit,
+            max_blocks=opts.max_blocks,
+            stitch_replicate_limit=srl,
+            stitch_max_blocks=opts.stitch_max_blocks,
+        )
+        if st is None:
+            return None
+        cap = min(opts.max_blocks, opts.stitch_max_blocks)
+        for k, p in enumerate(st.phases):
+            tuned = tune(
+                p.members,
+                p.roots,
+                state.library,
+                max_blocks=cap,
+                replicate_limit=opts.replicate_limit,
+            )
+            if tuned is not None:
+                st.phases[k] = PhaseSolution(p.members, p.roots, tuned.solution)
+        return CacheEntry(
+            signature=sig,
+            solution=None,
+            memory=None,
+            cost_s=state.library.model.stitched_fusion_time(st),
+            stitched=st,
+        )
+
 
 class MemoryPass(Pass):
     """VMEM scratch planning with the §5.1.2 feedback loop: on
@@ -254,6 +353,19 @@ class MemoryPass(Pass):
         opts = state.options
         fusion, entry = p.fusion, p.entry
         members, roots = fusion.members, fusion.roots
+        if entry.stitched is not None:
+            # stitched plans have no shrink loop: interface buffers are
+            # required by construction, so an over-budget stitch (normally
+            # vetoed during fusion) demotes to standalone kernels
+            try:
+                entry.memory = plan_stitched_memory(
+                    entry.stitched, opts.vmem_limit
+                )
+            except MemoryInfeasible:
+                state.demoted.extend(fusion.members)
+                return False
+            entry.kept_members = len(members)
+            return True
         tuned: Optional[TunedPlan] = TunedPlan(entry.solution, entry.cost_s)
         dropped: List[Instruction] = []
         while tuned is not None:
@@ -309,10 +421,16 @@ class CodegenPass(Pass):
         for p in state.planned:
             entry = p.entry
             if p.is_representative:
-                kernel = emit_fusion(
-                    p.fusion, entry.solution, entry.memory,
-                    interpret=state.options.interpret,
-                )
+                if entry.stitched is not None:
+                    kernel = emit_stitched_fusion(
+                        p.fusion, entry.stitched, entry.memory,
+                        interpret=state.options.interpret,
+                    )
+                else:
+                    kernel = emit_fusion(
+                        p.fusion, entry.solution, entry.memory,
+                        interpret=state.options.interpret,
+                    )
                 entry.kernel = kernel
                 p.kernel = kernel
             else:

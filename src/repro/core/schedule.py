@@ -386,3 +386,247 @@ def any_satisfiable(
         except Unsatisfiable:
             continue
     return None
+
+
+# --------------------------------------------------------------------------
+# Multi-phase stitching across schedule breaks (follow-up work,
+# arXiv:1911.11576 / 2009.10924): when no SINGLE block schedule covers a
+# group (reduce -> re-tiled broadcast, full transposes past the replicate
+# limit), the group may still lower to ONE kernel as a sequence of
+# schedule-consistent *phases*.  Every value crossing a phase boundary (an
+# "interface" tensor) is materialized WHOLE in a VMEM staging buffer by the
+# producer phase and re-tiled by the consumer phase's own schedule.
+# --------------------------------------------------------------------------
+
+CONSISTENT = "consistent"      # one schedule covers the whole group
+STITCHABLE = "stitchable"      # multi-phase lowering through staged buffers
+INFEASIBLE = "infeasible"      # some member has no schedule at all
+
+
+@dataclass
+class PhaseSolution:
+    """One schedule-consistent phase of a stitched kernel."""
+
+    members: List[Instruction]           # topological order
+    roots: List[Instruction]             # values leaving the phase
+    solution: ScheduleSolution
+
+    @property
+    def blocks(self) -> int:
+        return self.solution.blocks
+
+
+@dataclass
+class StitchedSolution:
+    """A feasible multi-phase schedule assignment for one fused group.
+
+    ``interfaces`` are the group-interior values produced in one phase and
+    consumed in a later one: they are staged FULLY (untiled) in VMEM, so the
+    consumer phase can re-tile them under an arbitrary sub-schedule.
+    """
+
+    phases: List[PhaseSolution]
+    interfaces: List[Instruction]
+
+    @property
+    def num_phases(self) -> int:
+        return len(self.phases)
+
+    @property
+    def blocks(self) -> int:
+        """Total sequential grid steps across all phase loops."""
+        return sum(p.blocks for p in self.phases)
+
+    @property
+    def phase_sizes(self) -> Tuple[int, ...]:
+        return tuple(len(p.members) for p in self.phases)
+
+    @property
+    def interface_bytes(self) -> int:
+        return sum(i.bytesize for i in self.interfaces)
+
+    def phase_of(self, instr: Instruction) -> int:
+        for k, p in enumerate(self.phases):
+            if any(m.id == instr.id for m in p.members):
+                return k
+        raise KeyError(instr.name)
+
+
+@dataclass
+class StitchVerdict:
+    """The three-way result of ``stitchable`` — replaces the boolean
+    SchdConsistent veto.  Exactly one payload is set per verdict."""
+
+    verdict: str                                   # CONSISTENT | STITCHABLE | INFEASIBLE
+    solution: Optional[ScheduleSolution] = None    # CONSISTENT
+    stitched: Optional[StitchedSolution] = None    # STITCHABLE
+
+    def __bool__(self) -> bool:
+        return self.verdict != INFEASIBLE
+
+
+def _phase_roots(
+    phase_members: List[Instruction], phase_ids: set
+) -> List[Instruction]:
+    """Values leaving a phase: used by a later phase of the same group or by
+    anything outside the group entirely."""
+    out = []
+    for m in phase_members:
+        if not m.users or any(u.id not in phase_ids for u in m.users):
+            out.append(m)
+    return out
+
+
+def _phase_solution(
+    phase_members: List[Instruction],
+    replicate_limit: int,
+    max_blocks: int,
+    stitch_replicate_limit: int,
+) -> Tuple[Optional[ScheduleSolution], int]:
+    """A schedule for one phase plus its quality *tier*.
+
+    Tier 0: chunked under the normal replicate limit (the same solution a
+    consistent fusion would get).  Tier 1: needs the relaxed stitching limit
+    (the phase's working set lives in VMEM staging anyway, so replication is
+    bounded by the stitched memory plan, not this check).  Tier 2: the
+    degenerate fully-replicated single-block phase ``candidate_schedules``
+    never proposes — ops like full transposes have NO chunked schedule, and
+    whole-tensor execution inside a staged phase is exactly what stitching
+    buys.  The phase partitioner cuts rather than letting growth DOWNGRADE
+    an existing phase's tier.
+    """
+    phase_ids = {m.id for m in phase_members}
+    roots = _phase_roots(phase_members, phase_ids)
+    if not roots:
+        return None, 99
+    sol = any_satisfiable(
+        phase_members, roots,
+        replicate_limit=replicate_limit, max_blocks=max_blocks,
+    )
+    if sol is not None:
+        return sol, 0
+    lim = max(stitch_replicate_limit, replicate_limit)
+    sol = any_satisfiable(
+        phase_members, roots, replicate_limit=lim, max_blocks=max_blocks
+    )
+    if sol is not None:
+        return sol, 1
+    try:
+        return (
+            resolve_schedules(
+                phase_members, roots, {r.id: REPLICATED for r in roots}, lim
+            ),
+            2,
+        )
+    except Unsatisfiable:
+        return None, 99
+
+
+def resolve_stitched(
+    members: List[Instruction],
+    roots: List[Instruction],
+    replicate_limit: int = 512 * 1024,
+    max_blocks: int = 1 << 16,
+    stitch_replicate_limit: int = 4 * 1024 * 1024,
+    stitch_max_blocks: int = 64,
+    max_phases: int = 8,
+) -> Optional[StitchedSolution]:
+    """Partition ``members`` (topologically ordered) into schedule-consistent
+    phases at schedule breaks, greedily: grow the current phase one member at
+    a time and cut exactly where ``any_satisfiable`` stops holding.  Phase
+    grids are capped at ``stitch_max_blocks`` because each phase lowers as a
+    sequential loop over its sub-schedule inside one kernel.
+
+    Returns None when some member has no schedule even in a phase of its own
+    (or the phase count explodes) — the group is then truly infeasible.
+    """
+    group_ids = {m.id for m in members}
+    blocks_cap = min(max_blocks, stitch_max_blocks)
+    phases: List[PhaseSolution] = []
+    cur: List[Instruction] = []
+    cur_sol: Optional[ScheduleSolution] = None
+    cur_tier = 99
+    for m in members:
+        trial = cur + [m]
+        sol, tier = _phase_solution(
+            trial, replicate_limit, blocks_cap, stitch_replicate_limit
+        )
+        if sol is not None and (not cur or tier <= cur_tier):
+            cur, cur_sol, cur_tier = trial, sol, tier
+            continue
+        if not cur:
+            return None                      # m alone has no schedule
+        phase_ids = {i.id for i in cur}
+        phases.append(
+            PhaseSolution(cur, _phase_roots(cur, phase_ids), cur_sol)
+        )
+        if len(phases) >= max_phases:
+            return None
+        cur = [m]
+        cur_sol, cur_tier = _phase_solution(
+            cur, replicate_limit, blocks_cap, stitch_replicate_limit
+        )
+        if cur_sol is None:
+            return None
+    if cur:
+        phase_ids = {i.id for i in cur}
+        phases.append(
+            PhaseSolution(cur, _phase_roots(cur, phase_ids), cur_sol)
+        )
+    # interface tensors: produced in one phase, consumed in a later one
+    phase_of: Dict[int, int] = {}
+    for k, p in enumerate(phases):
+        for i in p.members:
+            phase_of[i.id] = k
+    interfaces: List[Instruction] = []
+    for p in phases:
+        for i in p.members:
+            if any(
+                u.id in group_ids and phase_of[u.id] > phase_of[i.id]
+                for u in i.users
+            ):
+                interfaces.append(i)
+    return StitchedSolution(phases, interfaces)
+
+
+def stitchable(
+    roots: List[Instruction],
+    members: List[Instruction],
+    replicate_limit: int = 512 * 1024,
+    max_blocks: int = 1 << 16,
+    stitch_replicate_limit: int = 4 * 1024 * 1024,
+    stitch_max_blocks: int = 64,
+    allow_stitch: bool = True,
+) -> StitchVerdict:
+    """Three-way schedule-consistency verdict for a tentative fusion group.
+
+    CONSISTENT: one block schedule covers every member (the paper's
+    SchdConsistent).  STITCHABLE: no single schedule exists, but the group
+    partitions into consistent phases stitched through staged VMEM buffers.
+    INFEASIBLE: neither — the fusion pass must not take this enlargement.
+
+    Cost note: an INFEASIBLE verdict pays the full phase-partition attempt
+    (O(members) ``any_satisfiable`` solves) on top of the consistent check;
+    callers that probe many enlargements should memoize by member set, as
+    ``FusionScorer.verdict`` does.
+    """
+    sol = any_satisfiable(
+        members, roots, replicate_limit=replicate_limit, max_blocks=max_blocks
+    )
+    if sol is not None:
+        return StitchVerdict(CONSISTENT, solution=sol)
+    if not allow_stitch:
+        return StitchVerdict(INFEASIBLE)
+    st = resolve_stitched(
+        members, roots,
+        replicate_limit=replicate_limit,
+        max_blocks=max_blocks,
+        stitch_replicate_limit=stitch_replicate_limit,
+        stitch_max_blocks=stitch_max_blocks,
+    )
+    if st is None:
+        return StitchVerdict(INFEASIBLE)
+    # A single relaxed-limit phase is still one schedule — but one that only
+    # exists because full replication is allowed; it lowers through the
+    # stitched (sequential-loop) path so the memory plan bounds its residency.
+    return StitchVerdict(STITCHABLE, stitched=st)

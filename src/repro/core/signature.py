@@ -57,7 +57,10 @@ def fusion_signature(fusion: FusedComputation) -> str:
     """Content hash of a fusion's structure, independent of input bindings.
 
     Covers: per-input (shape, dtype); per-member (opcode, shape, dtype,
-    canonical attrs, operand references as member/input ordinals, root-ness).
+    canonical attrs, operand references as member/input ordinals, root-ness);
+    and the planner's committed phase structure (``stitch_phases``) — a
+    multi-phase stitched lowering and a single-schedule lowering of the same
+    member graph must never alias in the kernel cache.
     Instruction ids and names never enter the hash.
     """
     inputs = fusion.inputs
@@ -67,7 +70,8 @@ def fusion_signature(fusion: FusedComputation) -> str:
     root_ids = {r.id for r in fusion.roots}
 
     feats: List = [
-        tuple((tuple(i.shape), str(np.dtype(i.dtype))) for i in inputs)
+        ("phases", tuple(fusion.stitch_phases) if fusion.stitch_phases else None),
+        tuple((tuple(i.shape), str(np.dtype(i.dtype))) for i in inputs),
     ]
     for m in members:
         refs = tuple(
@@ -92,15 +96,27 @@ class CacheEntry:
     """One unique fusion structure: its tuned schedule, memory plan, and the
     emitted kernel (ids inside solution/memory refer to the representative
     instance the entry was built from; the kernel callable is positional and
-    binds to any instance with the same signature)."""
+    binds to any instance with the same signature).
+
+    Multi-phase stitched fusions carry a ``stitched`` solution (and a
+    ``StitchedMemoryPlan`` in ``memory``) instead of a single ``solution``;
+    their tuning records are never persisted to disk — the root-schedule
+    hint protocol only describes single-schedule kernels."""
 
     signature: str
-    solution: ScheduleSolution
-    memory: MemoryPlan
+    solution: Optional[ScheduleSolution]
+    memory: Optional[MemoryPlan]
     cost_s: float
     kernel: Optional[object] = None      # StitchedKernel of the representative
     root_scheds: List[Sched] = field(default_factory=list)  # in root order
     kept_members: Optional[int] = None   # after memory-feedback shrink
+    stitched: Optional[object] = None    # schedule.StitchedSolution
+
+    @property
+    def blocks(self) -> int:
+        if self.stitched is not None:
+            return self.stitched.blocks
+        return self.solution.blocks
 
 
 # Version of the on-disk tuning-record schema.  Bump whenever the persisted
@@ -148,6 +164,8 @@ class KernelCache:
 
     def put(self, entry: CacheEntry, persist: bool = True) -> None:
         self._entries[entry.signature] = entry
+        if entry.stitched is not None:
+            persist = False      # hint protocol is single-schedule only
         if persist and self._disk.path is not None:
             self._disk.put(
                 entry.signature,

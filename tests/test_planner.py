@@ -41,14 +41,18 @@ def _feeds(module, rng):
 # ----------------------------------------------------- adversarial graphs
 @pytest.mark.parametrize("graph_fn", [reduce_towers_graph, broadcast_towers_graph])
 def test_planner_beats_greedy_on_adversarial_graphs(graph_fn):
+    """The sink-pack candidate commits the tower union as ONE kernel at
+    planning time — the horizontal-merge post-pass has nothing left to do."""
     m = graph_fn()
     greedy = compile_module(m, StitchOptions(max_blocks=64, planner="greedy"))
     cost = compile_module(m, StitchOptions(max_blocks=64, planner="cost"))
     assert _kernels(cost) < _kernels(greedy)
+    assert _kernels(cost) == 1
     s = cost.stats
     assert s.planner_mode == "cost"
     assert s.plans_explored > 0
-    assert s.planner_merges > 0
+    assert s.planner_packs > 0
+    assert s.planner_merges == 0     # packed at plan time, not post-merged
     assert s.launches_saved_vs_greedy > 0
     assert s.launches_saved_vs_unfused > 0
     assert 0 < s.planner_predicted_s < s.greedy_predicted_s
@@ -78,11 +82,11 @@ def test_planner_modes_match_reference_oracle(graph_fn, mode, rng):
 
 
 def test_merged_multi_root_kernel_executes_correctly(rng):
-    """The merged ReduceTowers kernel carries one root per tower; every
+    """The packed ReduceTowers kernel carries one root per tower; every
     tower's scalar must still match the oracle bit-for-tolerance."""
     m = reduce_towers_graph(num_towers=4)
     comp = compile_and_compare(m, _feeds(m, rng), max_blocks=64)
-    assert comp.stats.planner_merges > 0
+    assert comp.stats.planner_packs > 0
     assert comp.stats.stitched_kernels == 1
 
 
@@ -161,15 +165,16 @@ def test_planner_merges_single_op_towers(rng):
     cost = deep_fuse(m, FusionConfig(planner="cost"))
     assert greedy.num_kernels == 4
     assert cost.num_kernels < greedy.num_kernels
-    assert cost.planner.merges_taken > 0
+    assert cost.planner.packs_taken + cost.planner.merges_taken > 0
     compile_and_compare(m, _feeds(m, rng), max_blocks=64)
 
 
 def test_planner_respects_injected_consistency_checker():
-    """Split and merge commits go through the SchdConsistent extension
-    point.  Greedy never builds a multi-reduce kernel on ReduceTowers (one
-    reduce per tower); a checker refusing them must also veto the planner's
-    tower merges, which would otherwise pack all reduces into one kernel."""
+    """Split, pack, and merge commits all go through the SchdConsistent
+    extension point.  Greedy never builds a multi-reduce kernel on
+    ReduceTowers (one reduce per tower); a checker refusing them must also
+    veto the planner's tower packs and merges, which would otherwise put
+    all reduces into one kernel."""
 
     def at_most_one_reduce(roots, members):
         return sum(1 for mem in members if mem.opcode == "reduce") <= 1
@@ -182,9 +187,10 @@ def test_planner_respects_injected_consistency_checker():
         n_reduce = sum(1 for mem in f.members if mem.opcode == "reduce")
         assert n_reduce <= 1, f
     assert cost.planner.merges_taken == 0
-    # without the checker the same graph merges down to one kernel
+    assert cost.planner.packs_taken == 0
+    # without the checker the same graph packs down to one kernel
     free = deep_fuse(m, FusionConfig(planner="cost"))
-    assert free.planner.merges_taken > 0
+    assert free.planner.packs_taken > 0
 
 
 def test_greedy_mode_reproduces_original_algorithm():

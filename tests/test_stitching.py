@@ -1,0 +1,245 @@
+"""Multi-phase kernel stitching: the three-way schedule verdict, phase
+partitioning, staged-interface memory planning, the stitched Pallas emitter
+(oracle parity), planner pack/stitch commits, signature salting, and the
+codegen scratch edge cases."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import compile_and_compare
+from repro.core import (
+    CONSISTENT,
+    INFEASIBLE,
+    STITCHABLE,
+    FusedComputation,
+    MemoryInfeasible,
+    StitchOptions,
+    compile_module,
+    fusion_signature,
+    plan_memory,
+    plan_stitched_memory,
+    reference_execute,
+    resolve_stitched,
+    stitchable,
+    trace,
+)
+from repro.core.schedule import any_satisfiable
+
+
+def _softmax_transpose(b, x, g):
+    """Row-softmax feeding a full 2-D transpose: the canonical schedule
+    break once the intermediate exceeds the replicate limit."""
+    scaled = x * b.broadcast(g, x.shape, (1,))
+    mx = b.reduce(scaled, (1,), "max")
+    e = b.exp(scaled - b.broadcast(mx, x.shape, (0,)))
+    s = b.reduce(e, (1,), "sum")
+    p = e / b.broadcast(s, x.shape, (0,))
+    t = b.transpose(p, (1, 0))
+    return b.tanh(t) * 0.5
+
+
+B, D = 32, 48
+TINY_REPL = 1024   # (B, D) f32 is 6144B: far past this replicate limit
+
+
+def _break_module():
+    return trace(
+        _softmax_transpose, ("x", (B, D), jnp.float32), ("g", (D,), jnp.float32)
+    )
+
+
+def _members(module):
+    return [i for i in module.instructions if i.opcode != "parameter"]
+
+
+def _feeds(module, rng):
+    return {
+        p.name: rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
+        for p in module.parameters
+    }
+
+
+# ------------------------------------------------------- three-way verdict
+def test_verdict_consistent_when_one_schedule_exists():
+    m = trace(
+        lambda b, x: b.tanh(x * 2.0), ("x", (8, 16), jnp.float32)
+    )
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    v = stitchable(roots, members)
+    assert v.verdict == CONSISTENT
+    assert v.solution is not None and v.stitched is None
+
+
+def test_verdict_stitchable_across_transpose_break():
+    m = _break_module()
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    v = stitchable(roots, members, replicate_limit=TINY_REPL, max_blocks=64)
+    assert v.verdict == STITCHABLE
+    st = v.stitched
+    assert st.num_phases >= 2
+    assert st.interfaces, "the softmax output must be staged"
+    assert st.interface_bytes == B * D * 4
+    # every member lands in exactly one phase
+    assert sum(st.phase_sizes) == len(members)
+
+
+def test_verdict_infeasible_when_stitching_disallowed():
+    m = _break_module()
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    v = stitchable(
+        roots, members, replicate_limit=TINY_REPL, max_blocks=64,
+        allow_stitch=False,
+    )
+    assert v.verdict == INFEASIBLE
+    assert not v
+
+
+def test_phase_partition_cuts_at_the_break():
+    m = _break_module()
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    st = resolve_stitched(
+        members, roots, replicate_limit=TINY_REPL, max_blocks=64
+    )
+    # the transpose must start a later phase than the softmax body
+    tr = next(i for i in members if i.opcode == "transpose")
+    assert st.phase_of(tr) > 0
+    assert st.phase_of(st.interfaces[0]) < st.phase_of(tr)
+
+
+# ------------------------------------------------- stitched memory planning
+def test_stitched_memory_plan_allocates_full_interfaces():
+    m = _break_module()
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    st = resolve_stitched(
+        members, roots, replicate_limit=TINY_REPL, max_blocks=64
+    )
+    plan = plan_stitched_memory(st, vmem_limit=512 * 1024)
+    assert plan.interface_bytes == st.interface_bytes
+    for buf in plan.interfaces.values():
+        assert int(np.prod(buf.shape or (1,))) * np.dtype(buf.dtype).itemsize \
+            == buf.nbytes                      # FULL, untiled allocation
+        assert buf.produced_phase < buf.last_consumer_phase
+    assert plan.total_bytes <= 512 * 1024
+    assert len(plan.phase_plans) == st.num_phases
+
+
+def test_stitched_memory_plan_infeasible_past_budget():
+    m = _break_module()
+    members = _members(m)
+    roots = FusedComputation(members).roots
+    st = resolve_stitched(
+        members, roots, replicate_limit=TINY_REPL, max_blocks=64
+    )
+    with pytest.raises(MemoryInfeasible):
+        plan_stitched_memory(st, vmem_limit=2048)  # < one interface tensor
+
+
+# ------------------------------------------------------ end-to-end compile
+def test_stitched_compile_single_kernel_oracle_parity(rng):
+    m = _break_module()
+    comp = compile_and_compare(
+        m, _feeds(m, rng), max_blocks=32, replicate_limit=TINY_REPL
+    )
+    s = comp.stats
+    assert s.stitched_kernels == 1 and s.standalone_kernels == 0
+    assert s.stitch_lowered_kernels == 1
+    assert s.stitch_phases_total >= 2
+    assert s.stitch_interface_bytes == B * D * 4
+    assert s.planner_stitches == 1
+    [rep] = s.reports
+    assert rep.num_phases >= 2
+    assert rep.interface_bytes == B * D * 4
+
+
+def test_stitching_disabled_splits_at_the_break(rng):
+    m = _break_module()
+    comp = compile_and_compare(
+        m, _feeds(m, rng), max_blocks=32, replicate_limit=TINY_REPL,
+        enable_stitching=False,
+    )
+    s = comp.stats
+    assert s.stitched_kernels + s.standalone_kernels > 1
+    assert s.stitch_lowered_kernels == 0
+
+
+def test_stitch_falls_back_to_split_when_interface_exceeds_vmem(rng):
+    """Satellite: a stitched group whose staged interface cannot fit the
+    VMEM budget must fall back to the split plan — and stay correct."""
+    m = _break_module()
+    comp = compile_and_compare(
+        m, _feeds(m, rng), max_blocks=32, replicate_limit=TINY_REPL,
+        vmem_limit=4096,
+    )
+    s = comp.stats
+    assert s.stitch_lowered_kernels == 0
+    assert s.stitched_kernels + s.standalone_kernels > 1
+
+
+def test_stitched_and_split_signatures_never_alias():
+    m = _break_module()
+    members = _members(m)
+    plain = FusedComputation(members, name="a")
+    stitched = FusedComputation(members, name="a", stitch_phases=(9, 5))
+    assert fusion_signature(plain) != fusion_signature(stitched)
+    assert fusion_signature(stitched) == fusion_signature(
+        FusedComputation(members, name="b", stitch_phases=(9, 5))
+    )
+
+
+def test_greedy_mode_keeps_the_paper_hard_veto(rng):
+    """planner='greedy' reproduces the paper's Algorithm 1 exactly: the
+    boolean SchdConsistent veto splits at the break and nothing is ever
+    lowered through the stitched emitter."""
+    m = _break_module()
+    comp = compile_and_compare(
+        m, _feeds(m, rng), max_blocks=32, replicate_limit=TINY_REPL,
+        planner="greedy",
+    )
+    assert comp.stats.stitch_lowered_kernels == 0
+    assert comp.stats.stitched_kernels + comp.stats.standalone_kernels > 1
+
+
+# ------------------------------------------------- codegen scratch edges
+def test_zero_scratch_slot_fusion(rng):
+    """Satellite: a fused group whose plan allocates NO scratch slots (pure
+    elementwise chain) emits and matches the oracle."""
+    def f(b, x):
+        for _ in range(5):
+            x = b.tanh(x * 1.1 + 0.1)
+        return x
+
+    m = trace(f, ("x", (8, 16), jnp.float32))
+    comp = compile_and_compare(m, _feeds(m, rng))
+    s = comp.stats
+    assert s.stitched_kernels == 1
+    assert s.smem_max == 0            # no ALLOC anywhere
+    assert all(r.scratch_bytes == 0 for r in s.reports)
+
+
+def test_share_slot_reuse_across_interior_ops(rng):
+    """Satellite: two serial interior reduces with identical chunk shapes —
+    the second dominates the first (its value is dead), so the dominance
+    planner reuses ONE scratch slot for both."""
+    def f(b, x):
+        m1 = b.reduce(x, (1,), "mean")
+        y = x * b.broadcast(m1, x.shape, (0,))
+        m2 = b.reduce(y, (1,), "mean")
+        return b.tanh(b.broadcast(m2, x.shape, (0,)))
+
+    m = trace(f, ("x", (16, 32), jnp.float32))
+    members = _members(m)
+    fusion = FusedComputation(members)
+    roots = fusion.roots
+    sol = any_satisfiable(members, roots, max_blocks=32)
+    plan = plan_memory(members, roots, sol)
+    actions = [e.action for e in plan.entries.values()]
+    assert "SHARE" in actions
+    assert len(plan.slots) == 1       # one slot serves both reduces
+    assert plan.shared_bytes > 0
+    comp = compile_and_compare(m, _feeds(m, rng), max_blocks=32)
+    assert comp.stats.shared_ratio > 0
