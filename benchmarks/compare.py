@@ -6,8 +6,12 @@ Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
   * **hard failures** (exit 1) on kernel-count / launch regressions — the
     planner emitting MORE kernels than the baseline on any graph
     (``planner/*/kernels`` ``cost=N``), a worse fusion ratio
-    (``fusion_ratio/*``), or a stitched launch count creeping up
-    (``stitch/*/launch_reduction`` ``stitched=N``);
+    (``fusion_ratio/*``), a stitched launch count creeping up
+    (``stitch/*/launch_reduction`` ``stitched=N``), a chunked-prefill
+    decode-launch count creeping back toward the per-token O(S) loop
+    (``serve_runtime/prefill_launches`` ``chunked=N``), or the traced
+    ExecutionPlan replay dispatching more segments per call
+    (``serve_runtime/*`` ``traced=N``);
   * **warnings** (exit 0) when modeled latency (``planner/*/predicted_us``)
     drifts past the tolerance (default ±15%).
 
@@ -75,6 +79,26 @@ def compare(
             if b is not None and f is not None and f > b:
                 failures.append(
                     f"{name}: stitched launch count regressed {b} -> {f}"
+                )
+
+        elif name == "serve_runtime/prefill_launches":
+            b = _derived_int(base, "chunked")
+            f = _derived_int(cur, "chunked")
+            if b is not None and f is not None and f > b:
+                failures.append(
+                    f"{name}: chunked prefill launch count regressed "
+                    f"{b} -> {f} (toward the per-token O(S) loop)"
+                )
+
+        elif name.startswith("serve_runtime/") and (
+            name.endswith("/replay") or name.endswith("/replay_dispatches")
+        ):
+            b = _derived_int(base, "traced")
+            f = _derived_int(cur, "traced")
+            if b is not None and f is not None and f > b:
+                failures.append(
+                    f"{name}: traced replay dispatch count regressed "
+                    f"{b} -> {f}"
                 )
 
         elif name.startswith("planner/") and name.endswith("/predicted_us"):

@@ -9,8 +9,28 @@ subgraph on marginal batched shapes, fused per the user decision).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import GraphBuilder, Module
+
+
+def random_feeds(module: Module, rng) -> dict:
+    """Random feeds for every module parameter (int32 params get small
+    first-dim-bounded indices, floats get uniform(-1, 1)) — the ONE feed
+    builder shared by the benchmark harness and the test suites
+    (``tests/conftest.make_feeds`` delegates here)."""
+    out = {}
+    for p in module.parameters:
+        if np.dtype(p.dtype) == np.int32:
+            out[p.name] = rng.randint(
+                0, max(2, p.shape[0] if p.shape else 2), size=p.shape
+            ).astype(np.int32)
+        else:
+            out[p.name] = rng.uniform(-1, 1, size=p.shape).astype(
+                np.dtype(p.dtype)
+            )
+    return out
+
 
 LR_DIM = (64, 16)          # batch, features
 W2V_DIM = (64, 32, 512)    # batch, embed dim, vocab

@@ -29,20 +29,9 @@ from repro.core import (  # noqa: E402
 from repro.core.xla_baseline import xla_baseline_groups  # noqa: E402
 from repro.core.schedule import REPLICATED  # noqa: E402
 
-from .graphs import ALL_GRAPHS  # noqa: E402
+from .graphs import ALL_GRAPHS, random_feeds as _feeds  # noqa: E402
 
 OPTS = StitchOptions(max_blocks=64)
-
-
-def _feeds(module, rng):
-    out = {}
-    for p in module.parameters:
-        if np.dtype(p.dtype) == np.int32:
-            out[p.name] = rng.randint(0, max(2, p.shape[0] if p.shape else 2),
-                                      size=p.shape).astype(np.int32)
-        else:
-            out[p.name] = rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
-    return out
 
 
 _CACHE = None
@@ -320,6 +309,70 @@ def bench_stitching():
     return rows
 
 
+def bench_serve_runtime():
+    """Runtime launch accounting (the serving analogue of Fig. 7): chunked
+    batched prefill — O(ceil(S/chunk)) masked decode launches per prompt —
+    vs the per-token oracle at O(S); plus the traced ExecutionPlan replay
+    (jitted segments per call) vs the eager per-step loop on every
+    benchmark graph."""
+    from repro.configs import get_config, reduced_config
+    from repro.models import init_params
+    from repro.serve import Request, ServeEngine
+
+    rows = []
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, seed=0)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, size=s) for s in (5, 9, 16, 23)]
+    chunk = 8
+    launches = {}
+    tok_s = {}
+    for mode, ck in (("pertoken", 1), ("chunked", chunk)):
+        # warm the shared jitted decode fns on a throwaway engine so the
+        # one-time trace+compile stays out of the measured window
+        warm = ServeEngine(
+            cfg, params, pool_size=2, max_len=64, prefill_chunk=ck
+        )
+        warm.admit(Request(rid=-1, prompt=prompts[0], max_new_tokens=2))
+        warm.run_until_done()      # prefill fn + one tick = both decode fns
+        eng = ServeEngine(
+            cfg, params, pool_size=2, max_len=64, prefill_chunk=ck
+        )
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            eng.admit(Request(rid=i, prompt=p, max_new_tokens=4))
+        eng.run_until_done()
+        dt = time.perf_counter() - t0
+        launches[mode] = eng.prefill_launches
+        tok_s[mode] = eng.tokens_generated / dt
+    rows.append(
+        ("serve_runtime/prefill_launches", 0.0,
+         f"pertoken={launches['pertoken']} chunked={launches['chunked']} "
+         f"chunk={chunk} saved={launches['pertoken'] - launches['chunked']}")
+    )
+    rows.append(
+        ("serve_runtime/prefill_throughput", 0.0,
+         f"pertoken_tok_s={tok_s['pertoken']:.1f} "
+         f"chunked_tok_s={tok_s['chunked']:.1f}")
+    )
+    eager = traced = 0
+    for name, (module, comp, lib) in compiled_all().items():
+        s = comp.stats
+        eager += s.eager_dispatches_per_call
+        traced += s.traced_dispatches_per_call
+        rows.append(
+            (f"serve_runtime/{name}/replay", 0.0,
+             f"eager={s.eager_dispatches_per_call} "
+             f"traced={s.traced_dispatches_per_call} "
+             f"donated={s.donated_buffers}")
+        )
+    rows.append(
+        ("serve_runtime/replay_dispatches", 0.0,
+         f"eager={eager} traced={traced} saved={eager - traced}")
+    )
+    return rows
+
+
 ALL_BENCHES = [
     bench_fusion_ratio,
     bench_speedup,
@@ -331,6 +384,7 @@ ALL_BENCHES = [
     bench_fusion_planner,
     bench_stitching,
     bench_stitched_kernels,
+    bench_serve_runtime,
 ]
 
 

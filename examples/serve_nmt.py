@@ -27,7 +27,8 @@ def main():
         num_heads=4, head_dim=32, d_ff=256, vocab_size=512,
     )
     params = init_params(cfg, seed=0)
-    engine = ServeEngine(cfg, params, pool_size=4, max_len=128)
+    engine = ServeEngine(cfg, params, pool_size=4, max_len=128,
+                         prefill_chunk=8)
 
     rng = np.random.RandomState(0)
     requests = [
@@ -37,27 +38,36 @@ def main():
     ]
 
     t0 = time.perf_counter()
-    pending = list(requests)
     done = []
     ticks = 0
-    while pending or any(r is not None for r in engine.slot_req):
-        while pending and engine.admit(pending[0]):
-            print(f"[admit] request {pending[0].rid} "
-                  f"(prompt {len(pending[0].prompt)} toks)")
-            pending.pop(0)
+    # admit everything up front: overflow parks on the engine's FIFO wait
+    # queue and is drained into freed slots at the start of each tick
+    for r in requests:
+        placed = engine.admit(r)
+        print(f"[admit] request {r.rid} (prompt {len(r.prompt)} toks) "
+              f"{'-> slot' if placed else '-> queued'}")
+    while engine.wait_queue or any(r is not None for r in engine.slot_req):
         engine.tick()
         ticks += 1
         for r in requests:
             if r.done and r not in done:
                 done.append(r)
-                print(f"[done ] request {r.rid}: {r.out_tokens}")
+                print(f"[done ] request {r.rid}: {r.out_tokens} "
+                      f"(wait {1e3 * (r.queue_wait_s or 0):.0f}ms, "
+                      f"ttft {1e3 * (r.ttft_s or 0):.0f}ms, "
+                      f"{r.tokens_per_s or 0:.1f} tok/s)")
         if ticks > 500:
             break
     dt = time.perf_counter() - t0
     total_toks = sum(len(r.out_tokens) for r in requests)
+    st = engine.stats()
     print(f"\nserved {len(done)}/{len(requests)} requests, "
           f"{total_toks} tokens in {dt:.2f}s "
           f"({total_toks / dt:.1f} tok/s on 1 CPU core, pool=4)")
+    print(f"prefill launches: {st['prefill_launches']} for "
+          f"{st['prefill_tokens']} prompt tokens "
+          f"(per-token prefill would be {st['prefill_tokens']}); "
+          f"decode launches: {st['decode_launches']}")
     assert len(done) == len(requests)
 
 

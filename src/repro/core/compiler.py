@@ -52,6 +52,13 @@ class StitchOptions:
     # Cap on any ONE phase's grid: phases lower as sequential (trace-time
     # unrolled) loops inside the kernel, so this bounds emitted code size.
     stitch_max_blocks: int = 64
+    # Runtime replay mode: True routes CompiledModule calls through the
+    # single-dispatch traced ExecutionPlan (jax.jit of the pre-bound step
+    # loop, released slots donated); False keeps the eager per-step loop.
+    # Runtime-only — deliberately NOT part of the kernel-cache options
+    # fingerprint (it changes how a plan is replayed, never what is
+    # tuned/emitted).
+    jit_replay: bool = True
 
 
 @dataclass
@@ -106,6 +113,19 @@ class CompileStats:
     greedy_kernels: int = 0                  # launches the floor plan needs
     planner_kernels: int = 0                 # fusion-pass view, pre-demotion
     unfused_kernels: int = 0                 # launches with no fusion at all
+    # runtime-replay accounting (ExecutionPlan): the eager loop dispatches
+    # one XLA call per pre-bound step; the traced replay dispatches one per
+    # jitted segment (segments break only where XLA could alter a library
+    # dot's accumulation order — 1 segment for most graphs).
+    replay_mode: str = "jit"                 # "jit" | "eager"
+    eager_dispatches_per_call: int = 0       # steps the eager loop runs
+    traced_dispatches_per_call: int = 1      # jitted replay segments
+    donated_buffers: int = 0                 # dead segment inputs donated
+
+    @property
+    def replay_dispatch_reduction(self) -> int:
+        """Per-call dispatches the traced replay saves over the eager loop."""
+        return self.eager_dispatches_per_call - self.traced_dispatches_per_call
 
     @property
     def fusion_ratio(self) -> float:
@@ -215,7 +235,9 @@ def build_outputs(state: CompilationState) -> None:
         else:
             predicted += t
 
-    executable = StitchedExecutable(state.module, plan, kernels)
+    executable = StitchedExecutable(
+        state.module, plan, kernels, jit_replay=state.options.jit_replay
+    )
     st = executable.launch_stats()
     hits = sum(1 for p in state.planned if p.cache_hit)
     from .fusion import constant_like
@@ -257,6 +279,10 @@ def build_outputs(state: CompilationState) -> None:
         greedy_kernels=pstats.greedy_kernels if pstats else 0,
         planner_kernels=pstats.planned_kernels if pstats else 0,
         unfused_kernels=unfused,
+        replay_mode="jit" if state.options.jit_replay else "eager",
+        eager_dispatches_per_call=st.eager_dispatches_per_call,
+        traced_dispatches_per_call=st.traced_dispatches_per_call,
+        donated_buffers=st.donated_buffers,
     )
 
 

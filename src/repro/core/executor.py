@@ -10,9 +10,29 @@ a flat buffer table with precomputed last-use release points (intermediate
 buffers are dropped eagerly), and each unit is pre-bound to its kernel and
 operand slots.  The per-call hot path is a flat loop over pre-bound steps —
 no graph traversal, no constant re-evaluation, no dict-keyed lookups.
+
+The eager step loop still pays one Python->XLA dispatch per step — exactly
+the launch overhead the compile-time passes fight.  ``jit_execute`` removes
+it: the pre-bound loop is inlined **at trace time** into ``jax.jit``
+segment callables (kernels, standalone ops, and library dots traced into
+one XLA program per segment), so a steady-state call costs one dispatch per
+segment instead of ``len(steps)`` — exactly ONE for graphs whose library
+dots only consume parameters or earlier-segment outputs.  A library call
+whose operand is produced inside the current segment starts a NEW segment:
+as a segment leader its operands arrive as jit arguments with canonical
+layouts — what the eager dispatch sees — which is what keeps the replay
+**bit-identical** to the eager oracle (kept in-program, XLA folds layout
+changes such as transposes into the dot operand and alters the
+accumulation order).  Intermediate values the eager loop releases at their
+last read are expressed to XLA as buffer donation of the corresponding
+segment inputs, letting the runtime reuse their memory in place (parameter
+and folded-constant buffers are never donated — the caller or the template
+still holds them).  The eager loop is kept as the replay oracle, and
+``LaunchStats`` counts traced vs eager dispatches.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -46,6 +66,13 @@ class LaunchStats:
     stitched_kernels: int = 0
     standalone_kernels: int = 0
     library_calls: int = 0
+    # runtime replay accounting: how calls were dispatched so far
+    traced_calls: int = 0            # calls through the jitted replay
+    eager_calls: int = 0             # calls through the eager step loop
+    jit_traces: int = 0              # segment traces performed so far
+    eager_dispatches_per_call: int = 0   # pre-bound steps the eager loop runs
+    traced_dispatches_per_call: int = 0  # jitted replay segments
+    donated_buffers: int = 0         # dead-after-segment inputs donated to XLA
 
     @property
     def total_non_library(self) -> int:
@@ -114,6 +141,82 @@ class _OpStep:
         self.arg_slots = arg_slots
         self.out_slot = out_slot
         self.release: List[int] = []
+
+
+class _JitSegment:
+    """A run of pre-bound steps traced into one jitted callable.
+
+    ``in_slots`` are buffer-table slots the segment reads but does not
+    produce; ``out_slots`` are slots it produces that are still needed
+    afterwards (roots, or read by a later segment / library call).
+    ``donate`` indexes the ``in_slots`` whose eager-release point falls
+    inside this segment — dead after the call, so their buffers are donated
+    to XLA.  Only *intermediate* slots (produced by an earlier segment,
+    owned by the runtime, fresh every call) are donated: template
+    (folded-constant) buffers are shared across calls, and parameter
+    buffers may still be held by the caller (``jnp.asarray`` is a no-copy
+    passthrough for device-resident feeds — donating those would delete
+    arrays the caller reuses on the next call).
+    """
+
+    __slots__ = ("steps", "in_slots", "out_slots", "released", "donate", "fn")
+
+    def __init__(self, steps: List[object], keep: set, protected_slots: set):
+        self.steps = list(steps)
+        written: List[int] = []
+        written_set: set = set()
+        in_slots: List[int] = []
+        in_set: set = set()
+        released: set = set()
+        for step in self.steps:
+            for s in step.arg_slots:
+                if s not in written_set and s not in in_set:
+                    in_set.add(s)
+                    in_slots.append(s)
+            outs = (
+                step.out_slots if type(step) is _KernelStep else [step.out_slot]
+            )
+            for s in outs:
+                if s not in written_set:
+                    written_set.add(s)
+                    written.append(s)
+            released.update(step.release)
+        self.in_slots = in_slots
+        self.released = released
+        self.out_slots = [
+            s for s in written if s in keep or s not in released
+        ]
+        self.donate = tuple(
+            i
+            for i, s in enumerate(in_slots)
+            if s in released and s not in protected_slots
+        )
+        self.fn = None               # jax.jit wrapper, built lazily
+
+    def build(self, counter) -> None:
+        """Trace-time body: the segment's pre-bound steps inlined into one
+        XLA program.  Step outputs pass through ``optimization_barrier`` so
+        XLA cannot re-fuse across step boundaries — fusion decisions belong
+        to the FusionStitching passes, and the barrier keeps the traced
+        program step-for-step equivalent to the eager oracle."""
+        steps, in_slots, out_slots = self.steps, self.in_slots, self.out_slots
+
+        def seg(*vals):
+            counter()                # runs only while tracing
+            local: Dict[int, object] = dict(zip(in_slots, vals))
+            for step in steps:
+                args = [local[s] for s in step.arg_slots]
+                if type(step) is _KernelStep:
+                    outs = jax.lax.optimization_barrier(step.kernel(*args))
+                    for s, o in zip(step.out_slots, outs):
+                        local[s] = o
+                else:
+                    local[step.out_slot] = jax.lax.optimization_barrier(
+                        apply_op(step.instr, *args)
+                    )
+            return tuple(local[s] for s in out_slots)
+
+        self.fn = jax.jit(seg, donate_argnums=self.donate)
 
 
 class ExecutionPlan:
@@ -206,22 +309,79 @@ class ExecutionPlan:
         for s, si in last_read.items():
             if s not in keep:
                 self.steps[si].release.append(s)
+        # Dead outputs — multi-output kernel slots (e.g. a fusion root with
+        # no remaining consumer) are never in ``last_read``, so without this
+        # they would hold their buffer for the whole run.  Release them at
+        # the step that produces them.
+        for si, step in enumerate(self.steps):
+            outs = (
+                step.out_slots if type(step) is _KernelStep else [step.out_slot]
+            )
+            for s in outs:
+                if s not in keep and s not in last_read:
+                    step.release.append(s)
 
         template: List[Optional[object]] = [None] * self.num_slots
         for s, v in template_fill:
             template[s] = v
         self._template = template
 
+        # ---- traced replay segments ---------------------------------------
+        # The step loop traces into jitted segments.  A library call
+        # (cuBLAS/MXU dot) whose operand was produced INSIDE the current
+        # segment starts a new one: as a segment leader its operands arrive
+        # as fresh jit arguments with canonical layouts — exactly what the
+        # eager dispatch sees — whereas in-program XLA folds layout changes
+        # (e.g. a transpose) into the dot operand and changes the
+        # accumulation order, breaking bit-parity with the eager oracle.
+        # Template + parameter slots are protected from donation (shared
+        # across calls / possibly still held by the caller).
+        protected_slots = {s for s, _ in template_fill} | {
+            slot for _, slot, _, _ in self._param_binds
+        }
+        self._segments: List[_JitSegment] = []
+        run: List[object] = []
+        produced: set = set()
+        for step in self.steps:
+            is_lib = type(step) is _OpStep and step.instr.is_library_call
+            if is_lib and run and any(s in produced for s in step.arg_slots):
+                self._segments.append(_JitSegment(run, keep, protected_slots))
+                run, produced = [], set()
+            run.append(step)
+            produced.update(
+                step.out_slots if type(step) is _KernelStep else [step.out_slot]
+            )
+        if run:
+            self._segments.append(_JitSegment(run, keep, protected_slots))
+        self.stats = LaunchStats(
+            eager_dispatches_per_call=len(self.steps),
+            traced_dispatches_per_call=len(self._segments),
+            donated_buffers=sum(len(seg.donate) for seg in self._segments),
+        )
+
     @property
     def num_folded(self) -> int:
         return sum(1 for v in self._template if v is not None)
 
-    def execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
-        buf = list(self._template)
+    def _bind_feeds(self, feeds: Dict[str, object]) -> List[object]:
+        """Validated parameter values in ``_param_binds`` order."""
+        vals = []
         for name, slot, dtype, shape in self._param_binds:
+            if name not in feeds:
+                raise KeyError(f"missing feed for parameter {name}")
             v = jnp.asarray(feeds[name], dtype=dtype)
             if tuple(v.shape) != shape:
                 raise ValueError(f"{name}: feed shape {v.shape} != {shape}")
+            vals.append(v)
+        return vals
+
+    def execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        """Eager replay: one Python-dispatched XLA call per step (the
+        traced-replay oracle)."""
+        buf = list(self._template)
+        for (name, slot, dtype, shape), v in zip(
+            self._param_binds, self._bind_feeds(feeds)
+        ):
             buf[slot] = v
         for step in self.steps:
             if type(step) is _KernelStep:
@@ -234,21 +394,64 @@ class ExecutionPlan:
                 )
             for s in step.release:
                 buf[s] = None
+        self.stats.eager_calls += 1
+        return {name: buf[s] for name, s in self._root_binds}
+
+    # ------------------------------------------------------------ traced
+    def _count_trace(self):
+        self.stats.jit_traces += 1
+
+    def jit_execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        """Traced replay: the pre-bound loop as a handful of jitted segment
+        calls — ``traced_dispatches_per_call`` dispatches instead of one
+        per step.
+
+        Bit-identical to ``execute`` (same kernels, same ``apply_op``
+        interpreter, same step order, segment boundaries wherever XLA could
+        alter library-dot accumulation order).  Only runtime-owned
+        intermediate buffers are donated, so caller-held feed arrays (jax
+        or numpy) stay valid across calls.
+        """
+        vals = self._bind_feeds(feeds)
+        buf = list(self._template)
+        for (name, slot, dtype, shape), v in zip(self._param_binds, vals):
+            buf[slot] = v
+        with warnings.catch_warnings():
+            # donation on backends without aliasing support (CPU) only warns
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            for seg in self._segments:
+                if seg.fn is None:
+                    seg.build(self._count_trace)
+                outs = seg.fn(*[buf[s] for s in seg.in_slots])
+                for s, o in zip(seg.out_slots, outs):
+                    buf[s] = o
+                for s in seg.released:
+                    buf[s] = None
+        self.stats.traced_calls += 1
         return {name: buf[s] for name, s in self._root_binds}
 
 
 class StitchedExecutable:
-    """Runs a compiled FusionPlan through its precomputed ExecutionPlan."""
+    """Runs a compiled FusionPlan through its precomputed ExecutionPlan.
+
+    ``jit_replay=True`` (the default) replays through the single traced
+    callable; ``jit_replay=False`` keeps the eager per-step loop — the
+    oracle the traced path is validated against.
+    """
 
     def __init__(
         self,
         module: Module,
         plan: FusionPlan,
         kernels: Dict[str, StitchedKernel],  # fusion name -> kernel
+        jit_replay: bool = True,
     ):
         self.module = module
         self.plan = plan
         self.kernels = kernels
+        self.jit_replay = jit_replay
         self.execution_plan = ExecutionPlan(module, plan, kernels)
 
     def launch_stats(self) -> LaunchStats:
@@ -258,7 +461,22 @@ class StitchedExecutable:
             1 for s in self.plan.standalone if not s.is_library_call
         )
         st.library_calls = self.plan.num_library_calls
+        rt = self.execution_plan.stats
+        st.traced_calls = rt.traced_calls
+        st.eager_calls = rt.eager_calls
+        st.jit_traces = rt.jit_traces
+        st.eager_dispatches_per_call = rt.eager_dispatches_per_call
+        st.traced_dispatches_per_call = rt.traced_dispatches_per_call
+        st.donated_buffers = rt.donated_buffers
         return st
 
+    def execute_eager(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        return self.execution_plan.execute(feeds)
+
+    def jit_execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        return self.execution_plan.jit_execute(feeds)
+
     def __call__(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        if self.jit_replay:
+            return self.execution_plan.jit_execute(feeds)
         return self.execution_plan.execute(feeds)

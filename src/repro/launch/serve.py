@@ -1,7 +1,7 @@
 """Serving launcher: batched decode on a selected architecture.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 8 --max-new 16 [--reduced]
+        --requests 8 --max-new 16 [--reduced] [--prefill-chunk 16]
 """
 from __future__ import annotations
 
@@ -23,6 +23,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pool", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per prefill launch (1 = per-token)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -31,26 +33,41 @@ def main():
         cfg = reduced_config(cfg)
     params = init_params(cfg, seed=0)
     print(f"[serve] {cfg.name}: {count_params(params):,} params, "
-          f"pool={args.pool}, max_len={args.max_len}")
-    engine = ServeEngine(cfg, params, pool_size=args.pool, max_len=args.max_len)
+          f"pool={args.pool}, max_len={args.max_len}, "
+          f"prefill_chunk={args.prefill_chunk}")
+    engine = ServeEngine(cfg, params, pool_size=args.pool,
+                         max_len=args.max_len,
+                         prefill_chunk=args.prefill_chunk)
     rng = np.random.RandomState(0)
     reqs = [
         Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, size=rng.randint(4, 12)),
                 max_new_tokens=args.max_new)
         for i in range(args.requests)
     ]
-    pending = list(reqs)
     t0 = time.perf_counter()
     ticks = 0
-    while (pending or any(r is not None for r in engine.slot_req)) and ticks < 2000:
-        while pending and engine.admit(pending[0]):
-            pending.pop(0)
+    # admit() parks overflow on the engine's wait queue; ticks drain it
+    for r in reqs:
+        engine.admit(r)
+    while (engine.wait_queue or engine.active_slots) and ticks < 2000:
         engine.tick()
         ticks += 1
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens or []) for r in reqs)
+    for r in reqs:
+        print(f"[req {r.rid:3d}] prompt={len(r.prompt):3d} "
+              f"new={len(r.out_tokens or []):3d} "
+              f"wait={1e3 * (r.queue_wait_s or 0):7.1f}ms "
+              f"ttft={1e3 * (r.ttft_s or 0):7.1f}ms "
+              f"latency={1e3 * (r.latency_s or 0):7.1f}ms "
+              f"tok/s={r.tokens_per_s or 0:6.1f}")
+    st = engine.stats()
     print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} done, "
           f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    print(f"[serve] launches: prefill={st['prefill_launches']} "
+          f"(per-token would be {st['prefill_tokens']}), "
+          f"decode={st['decode_launches']}; "
+          f"decode_cache={st['decode_cache']}")
 
 
 if __name__ == "__main__":

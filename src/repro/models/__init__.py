@@ -2,6 +2,7 @@
 VLM-backbone / audio-enc-dec families."""
 from .module import Creator, count_params, tree_bytes
 from .transformer import (
+    decode_chunk,
     decode_step,
     forward,
     init_cache,

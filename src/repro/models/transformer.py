@@ -432,6 +432,47 @@ def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None):
     return logits, new_cache
 
 
+def decode_chunk(params: Params, cache: Params, tokens, pos, cfg,
+                 active=None, lengths=None):
+    """Token-chunk decode: ``tokens`` (B, C) int32, ``pos`` (B,) chunk-start
+    absolute positions, ``lengths`` optional (B,) valid token counts within
+    the chunk (ragged tails; default C), ``active`` optional (B,) slot mask.
+
+    Runs the C per-token decode steps inside ONE traced call (a
+    ``lax.scan`` over the chunk axis) — a length-S prefill costs
+    O(ceil(S/C)) launches instead of O(S), while remaining step-for-step
+    the same computation as C ``decode_step`` calls.  Positions past a
+    slot's ``lengths`` are masked out of the cache write exactly like an
+    inactive slot.
+
+    Returns (logits (B, padded_vocab) f32 taken at each slot's LAST valid
+    position, new cache); inactive or zero-length slots return zeros.
+    """
+    B, C = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    act = jnp.ones((B,), bool) if active is None else jnp.asarray(active)
+    lengths = (
+        jnp.full((B,), C, jnp.int32)
+        if lengths is None
+        else jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    )
+    padded_vocab = params["embed"]["unembed"].shape[-1]
+    last0 = jnp.zeros((B, padded_vocab), jnp.float32)
+
+    def step(carry, xs):
+        cache, last = carry
+        toks_i, i = xs
+        step_act = act & (i < lengths)
+        logits, cache = decode_step(params, cache, toks_i, pos + i, cfg, step_act)
+        keep = (step_act & (i == lengths - 1))[:, None]
+        return (cache, jnp.where(keep, logits, last)), None
+
+    (cache, last), _ = jax.lax.scan(
+        step, (cache, last0), (tokens.T, jnp.arange(C, dtype=jnp.int32))
+    )
+    return last, cache
+
+
 def prefill_cross_attention(params: Params, frames, cfg, batch: int):
     """Whisper: run the encoder and precompute per-layer cross K/V."""
     enc = encode_audio(params, frames, cfg)            # (B, Se, d)

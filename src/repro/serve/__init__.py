@@ -1,1 +1,1 @@
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, decode_cache_size, decode_cache_stats

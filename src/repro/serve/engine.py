@@ -2,22 +2,32 @@
 continuous slot-based batching.
 
 The engine keeps a fixed pool of batch slots.  A request claims a free
-slot, is prefilled (token-by-token through the shared batched decode step
-with a write mask so other slots are untouched), then every ``tick`` runs
-ONE batched decode step for the whole pool with per-slot positions.  New
-requests join between ticks — continuous batching without recompilation
-(pool size and max_len are static).
+slot and is prefilled in **token chunks**: one masked batched
+``decode_chunk`` call per ``prefill_chunk`` prompt tokens — O(ceil(S/C))
+decode launches for a length-S prompt instead of the O(S) per-token loop
+(kept as the chunk-size-1 oracle).  Then every ``tick`` runs ONE batched
+decode step for the whole pool with per-slot positions.  New requests join
+between ticks — continuous batching without recompilation (pool size,
+chunk size and max_len are static).  When the pool is full, ``admit``
+parks the request on a FIFO wait queue drained at the start of each tick
+instead of dropping it.
+
+Admission validates prompts: empty prompts are rejected outright, and
+prompts that would scatter past the KV ring (``len(prompt) > max_len - 1``)
+are rejected instead of silently corrupting the cache.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import decode_step, init_cache
+from ..models import decode_chunk, decode_step, init_cache
 
 
 @dataclasses.dataclass
@@ -27,60 +37,255 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: Optional[List[int]] = None
     done: bool = False
+    # per-request latency/throughput accounting (perf_counter stamps)
+    t_submit: Optional[float] = None   # first admit() attempt (queue entry)
+    t_admit: Optional[float] = None    # slot claimed, prefill started
+    t_first: Optional[float] = None    # first generated token (TTFT end)
+    t_done: Optional[float] = None     # request finished
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token, from submission (includes queue wait)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        if not self.out_tokens or self.latency_s in (None, 0.0):
+            return None
+        return len(self.out_tokens) / self.latency_s
 
 
-# Jitted decode steps are shared across engines with the same (config, pool)
-# — the serving-layer analogue of the compiler's fusion-signature kernel
-# dedup: N replica engines trace/compile the hot-path function once.
-_DECODE_CACHE: Dict[Tuple[str, int], Callable] = {}
+# Jitted decode steps are shared across engines with the same
+# (config, pool[, chunk]) — the serving-layer analogue of the compiler's
+# fusion-signature kernel dedup: N replica engines trace/compile each
+# hot-path function once.  LRU-bounded: a long-lived server process cycling
+# through configs/pool sizes must not grow this without limit.
+_DECODE_CACHE: "OrderedDict[Tuple, Callable]" = OrderedDict()
+_DECODE_CACHE_CAP = 8
+_DECODE_CACHE_EVICTIONS = 0
+
+
+def _cached_jit(key: Tuple, build: Callable[[], Callable]) -> Tuple[Callable, bool]:
+    global _DECODE_CACHE_EVICTIONS
+    hit = key in _DECODE_CACHE
+    if hit:
+        _DECODE_CACHE.move_to_end(key)
+    else:
+        _DECODE_CACHE[key] = build()
+        while len(_DECODE_CACHE) > _DECODE_CACHE_CAP:
+            _DECODE_CACHE.popitem(last=False)   # evict least-recently-used
+            _DECODE_CACHE_EVICTIONS += 1
+    return _DECODE_CACHE[key], hit
 
 
 def _decode_fn(cfg, pool_size: int) -> Tuple[Callable, bool]:
-    key = (repr(cfg), pool_size)
-    hit = key in _DECODE_CACHE
-    if not hit:
-        _DECODE_CACHE[key] = jax.jit(
+    return _cached_jit(
+        ("step", repr(cfg), pool_size),
+        lambda: jax.jit(
             lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, act)
-        )
-    return _DECODE_CACHE[key], hit
+        ),
+    )
+
+
+def _decode_chunk_fn(cfg, pool_size: int, chunk: int) -> Tuple[Callable, bool]:
+    return _cached_jit(
+        ("chunk", repr(cfg), pool_size, chunk),
+        lambda: jax.jit(
+            lambda p, c, t, pos, act, lens: decode_chunk(
+                p, c, t, pos, cfg, act, lens
+            )
+        ),
+    )
 
 
 def decode_cache_size() -> int:
     return len(_DECODE_CACHE)
 
 
+def decode_cache_stats() -> Dict[str, int]:
+    return {
+        "size": len(_DECODE_CACHE),
+        "cap": _DECODE_CACHE_CAP,
+        "evictions": _DECODE_CACHE_EVICTIONS,
+    }
+
+
 class ServeEngine:
-    def __init__(self, cfg, params, pool_size: int = 4, max_len: int = 512):
+    def __init__(self, cfg, params, pool_size: int = 4, max_len: int = 512,
+                 prefill_chunk: int = 16):
         self.cfg = cfg
         self.params = params
         self.pool = pool_size
         self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
         self.cache = init_cache(cfg, pool_size, max_len)
         self.slot_req: List[Optional[Request]] = [None] * pool_size
         self.slot_pos = np.zeros(pool_size, np.int32)
         self.slot_remaining = np.zeros(pool_size, np.int32)
         self.slot_last = np.zeros(pool_size, np.int32)
         self._decode, self.decode_cache_hit = _decode_fn(cfg, pool_size)
+        self._decode_chunk = None
+        if self.prefill_chunk > 1:
+            self._decode_chunk, _ = _decode_chunk_fn(
+                cfg, pool_size, self.prefill_chunk
+            )
+        self.wait_queue: "deque[Request]" = deque()
         self.ticks = 0
         self.tokens_generated = 0
         self.requests_completed = 0
+        self.requests_rejected = 0       # invalid prompts (never queued)
+        self.prefill_launches = 0        # decode calls spent on prefill
+        self.prefill_tokens = 0          # prompt tokens prefilled
+        self.decode_launches = 0         # batched tick decode calls
 
     @property
     def active_slots(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
 
+    def stats(self) -> Dict[str, object]:
+        """Serving counters: launch accounting + queue depth.
+
+        ``prefill_launches`` vs ``prefill_tokens`` is the chunked-prefill
+        win: the per-token loop would spend one launch per prompt token.
+        """
+        return {
+            "ticks": self.ticks,
+            "tokens_generated": self.tokens_generated,
+            "requests_completed": self.requests_completed,
+            "requests_rejected": self.requests_rejected,
+            "prefill_launches": self.prefill_launches,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_launches": self.decode_launches,
+            "prefill_chunk": self.prefill_chunk,
+            "queue_depth": len(self.wait_queue),
+            "decode_cache": decode_cache_stats(),
+        }
+
     # ------------------------------------------------------------ admit
     def admit(self, req: Request) -> bool:
+        """Place ``req`` in a free slot (True) or park it on the FIFO wait
+        queue (False — it is NOT dropped; ticks drain the queue as slots
+        free up).  Invalid prompts raise ValueError and are never queued.
+        """
+        self._validate(req)
+        # retry-loop callers (`while pending and admit(pending[0])`) may
+        # re-admit a request that is already generating in a slot or
+        # already finished — never place or queue those again, or a done
+        # request would be re-prefilled and re-generated
+        if req.done or any(r is req for r in self.slot_req):
+            return False
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        # FIFO fairness + no double-placement: queued requests claim freed
+        # slots before this one (draining also places req itself if it was
+        # already at the front of the queue)
+        self._drain_queue()
+        if any(r is req for r in self.slot_req):
+            return True
         for s in range(self.pool):
             if self.slot_req[s] is None:
-                self.slot_req[s] = req
-                req.out_tokens = []
-                self._prefill(s, req)
+                self._place(s, req)
                 return True
+        if not any(q is req for q in self.wait_queue):
+            self.wait_queue.append(req)
         return False
 
+    def _validate(self, req: Request) -> None:
+        n = len(req.prompt)
+        if n == 0:
+            self.requests_rejected += 1
+            raise ValueError(
+                f"request {req.rid}: empty prompt — there is no position to "
+                "decode from; send at least one (e.g. BOS) token"
+            )
+        if n > self.max_len - 1:
+            self.requests_rejected += 1
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} exceeds the KV cache "
+                f"(max_len={self.max_len}, limit {self.max_len - 1}) — it "
+                "would silently wrap the ring and corrupt earlier positions"
+            )
+
+    def _place(self, slot: int, req: Request) -> None:
+        self.slot_req[slot] = req
+        req.out_tokens = []
+        req.t_admit = time.perf_counter()
+        self._prefill(slot, req)
+
+    def _drain_queue(self) -> None:
+        while self.wait_queue:
+            head = self.wait_queue[0]
+            if head.done or any(r is head for r in self.slot_req):
+                self.wait_queue.popleft()   # stale entry — never re-place
+                continue
+            free = next(
+                (s for s, r in enumerate(self.slot_req) if r is None), None
+            )
+            if free is None:
+                return
+            self._place(free, self.wait_queue.popleft())
+
+    # ---------------------------------------------------------- prefill
     def _prefill(self, slot: int, req: Request):
-        toks = req.prompt.astype(np.int32)
+        toks = np.asarray(req.prompt).astype(np.int32)
+        if self.prefill_chunk > 1:
+            logits = self._prefill_chunked(slot, toks)
+        else:
+            logits = self._prefill_per_token(slot, toks)
+        self.prefill_tokens += len(toks)
+        self.slot_pos[slot] = len(toks)
+        self.slot_remaining[slot] = req.max_new_tokens
+        nxt = int(np.argmax(np.asarray(logits)[slot, : self.cfg.vocab_size]))
+        req.out_tokens.append(nxt)
+        req.t_first = time.perf_counter()
+        self.slot_last[slot] = nxt
+        self.slot_remaining[slot] -= 1
+        self.tokens_generated += 1
+        # same stop rule as tick: out of budget, or the next decode write
+        # would land past the KV ring
+        if (
+            self.slot_remaining[slot] <= 0
+            or self.slot_pos[slot] >= self.max_len - 1
+        ):
+            self._finish(slot)
+
+    def _prefill_chunked(self, slot: int, toks: np.ndarray):
+        """One masked batched decode launch per ``prefill_chunk`` tokens."""
+        C = self.prefill_chunk
+        active = np.zeros(self.pool, bool)
+        active[slot] = True
+        logits = None
+        for start in range(0, len(toks), C):
+            part = toks[start:start + C]
+            tok_mat = np.zeros((self.pool, C), np.int32)
+            tok_mat[slot, : len(part)] = part
+            lengths = np.zeros(self.pool, np.int32)
+            lengths[slot] = len(part)
+            pos = self.slot_pos.copy()
+            pos[slot] = start
+            logits, self.cache = self._decode_chunk(
+                self.params, self.cache, jnp.asarray(tok_mat),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(lengths),
+            )
+            self.prefill_launches += 1
+        return logits
+
+    def _prefill_per_token(self, slot: int, toks: np.ndarray):
+        """The chunk-size-1 oracle: one decode launch per prompt token."""
         active = np.zeros(self.pool, bool)
         active[slot] = True
         logits = None
@@ -93,21 +298,21 @@ class ServeEngine:
                 self.params, self.cache, jnp.asarray(tok_vec),
                 jnp.asarray(pos), jnp.asarray(active),
             )
-        self.slot_pos[slot] = len(toks)
-        self.slot_remaining[slot] = req.max_new_tokens
-        nxt = int(np.argmax(np.asarray(logits)[slot, : self.cfg.vocab_size]))
-        req.out_tokens.append(nxt)
-        self.slot_last[slot] = nxt
-        self.slot_remaining[slot] -= 1
-        self.tokens_generated += 1
-        if self.slot_remaining[slot] <= 0:
-            req.done = True
-            self.slot_req[slot] = None
-            self.requests_completed += 1
+            self.prefill_launches += 1
+        return logits
+
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.slot_req[slot] = None
+        self.requests_completed += 1
 
     # ------------------------------------------------------------- tick
     def tick(self):
-        """One batched decode step for all active slots (per-slot pos)."""
+        """Drain the wait queue into free slots, then one batched decode
+        step for all active slots (per-slot pos)."""
+        self._drain_queue()
         active = np.array([r is not None for r in self.slot_req])
         if not active.any():
             return
@@ -116,6 +321,7 @@ class ServeEngine:
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self.slot_pos), jnp.asarray(active),
         )
+        self.decode_launches += 1
         arr = np.asarray(logits)
         for s in np.nonzero(active)[0]:
             r = self.slot_req[s]
@@ -126,13 +332,13 @@ class ServeEngine:
             self.slot_remaining[s] -= 1
             self.tokens_generated += 1
             if self.slot_remaining[s] <= 0 or self.slot_pos[s] >= self.max_len - 1:
-                r.done = True
-                self.slot_req[s] = None
-                self.requests_completed += 1
+                self._finish(s)
         self.ticks += 1
 
     def run_until_done(self, max_ticks: int = 2000):
         t = 0
-        while any(r is not None for r in self.slot_req) and t < max_ticks:
+        while (
+            self.wait_queue or any(r is not None for r in self.slot_req)
+        ) and t < max_ticks:
             self.tick()
             t += 1

@@ -1,3 +1,6 @@
+import os
+import sys
+
 import numpy as np
 import pytest
 
@@ -26,6 +29,10 @@ def compile_and_compare(module, feeds, rtol=2e-5, atol=2e-5, **opt_kwargs):
             err_msg=f"root {k} diverged",
         )
     return compiled
+
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+from graphs import random_feeds as make_feeds  # noqa: E402,F401  (canonical copy)
 
 
 @pytest.fixture

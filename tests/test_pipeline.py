@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import compile_and_compare
+from conftest import compile_and_compare, make_feeds as _feeds
 from repro.core import (
     GraphBuilder,
     KernelCache,
@@ -81,11 +81,6 @@ def _stacked_module(n_layers):
     return trace(f, *specs)
 
 
-def _feeds(module, rng):
-    return {
-        p.name: rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
-        for p in module.parameters
-    }
 
 
 def test_kernel_cache_hits_on_identical_blocks(rng):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import compile_and_compare
+from conftest import compile_and_compare, make_feeds as _feeds
 from repro.core import (
     FusionConfig,
     GraphBuilder,
@@ -31,11 +31,6 @@ def _kernels(comp):
     return comp.stats.stitched_kernels + comp.stats.standalone_kernels
 
 
-def _feeds(module, rng):
-    return {
-        p.name: rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
-        for p in module.parameters
-    }
 
 
 # ----------------------------------------------------- adversarial graphs

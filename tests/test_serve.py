@@ -76,3 +76,177 @@ def test_ssm_engine_serves():
     eng.admit(req)
     eng.run_until_done()
     assert req.done and len(req.out_tokens) == 4
+
+
+# ----------------------------------------------------- chunked prefill
+def test_chunked_prefill_token_parity(small_model):
+    """Chunked prefill must generate exactly the per-token loop's tokens
+    (ragged tail included: 7 tokens with chunk 4)."""
+    cfg, params = small_model
+    prompt = np.array([5, 9, 2, 17, 3, 8, 1])
+    outs, launches = {}, {}
+    for chunk in (1, 4, 16):
+        eng = ServeEngine(cfg, params, pool_size=2, max_len=64,
+                          prefill_chunk=chunk)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+        assert eng.admit(req)
+        eng.run_until_done()
+        outs[chunk] = req.out_tokens
+        launches[chunk] = eng.prefill_launches
+    assert outs[1] == outs[4] == outs[16]
+    assert launches[1] == 7          # per-token oracle: O(S)
+    assert launches[4] == 2          # O(ceil(S/chunk))
+    assert launches[16] == 1
+
+
+def test_chunked_prefill_isolation(small_model):
+    """Chunked prefill must not perturb a slot mid-generation (the write
+    mask covers the whole chunk)."""
+    cfg, params = small_model
+    prompt = np.array([5, 9, 2, 17])
+    solo = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    e1 = ServeEngine(cfg, params, pool_size=2, max_len=64, prefill_chunk=4)
+    e1.admit(solo)
+    e1.run_until_done()
+
+    e2 = ServeEngine(cfg, params, pool_size=2, max_len=64, prefill_chunk=4)
+    same = Request(rid=1, prompt=prompt, max_new_tokens=6)
+    e2.admit(same)
+    e2.tick()
+    late = Request(rid=2, prompt=np.array([3, 3, 3, 3, 3]), max_new_tokens=4)
+    assert e2.admit(late)            # chunk-prefills while rid=1 is live
+    e2.run_until_done()
+    assert same.out_tokens == solo.out_tokens
+
+
+# ----------------------------------------------- admission validation
+def test_empty_prompt_rejected(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit(Request(rid=0, prompt=np.array([], dtype=np.int32)))
+    assert eng.requests_rejected == 1
+    assert not eng.wait_queue and eng.active_slots == []
+
+
+def test_over_capacity_prompt_rejected(small_model):
+    """Prompts longer than the KV ring used to scatter past the cache and
+    silently corrupt earlier positions; now they are rejected at admit."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=32)
+    with pytest.raises(ValueError, match="exceeds the KV cache"):
+        eng.admit(Request(rid=0, prompt=np.ones(32, np.int32)))
+    assert eng.requests_rejected == 1
+
+
+def test_at_capacity_prompt_stops_after_first_token(small_model):
+    """A max_len-1 prompt is admissible; prefill applies the same
+    max_len-1 stop as tick, so exactly one token comes out."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=32, prefill_chunk=8)
+    req = Request(rid=0, prompt=np.ones(31, np.int32), max_new_tokens=10)
+    assert eng.admit(req)
+    assert req.done and len(req.out_tokens) == 1
+    assert eng.active_slots == []    # slot freed for the next request
+
+
+# ------------------------------------------------------- wait queue
+def test_wait_queue_admits_in_fifo_order(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64, prefill_chunk=4)
+    r1 = Request(rid=0, prompt=np.array([1, 2, 3]), max_new_tokens=2)
+    r2 = Request(rid=1, prompt=np.array([4, 5]), max_new_tokens=2)
+    r3 = Request(rid=2, prompt=np.array([6]), max_new_tokens=2)
+    assert eng.admit(r1) is True
+    assert eng.admit(r2) is False    # queued, not dropped
+    assert eng.admit(r3) is False
+    assert list(eng.wait_queue) == [r2, r3]
+    eng.run_until_done()
+    assert r1.done and r2.done and r3.done
+    assert len(r2.out_tokens) == 2 and len(r3.out_tokens) == 2
+    # FIFO: r2 claimed the slot before r3
+    assert r2.t_admit <= r3.t_admit
+    assert not eng.wait_queue
+
+
+def test_wait_queue_deduplicates_repeated_admit(small_model):
+    """Old callers loop `while admit(req)`; a re-admitted queued request
+    must not occupy two queue entries."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64)
+    eng.admit(Request(rid=0, prompt=np.array([1]), max_new_tokens=8))
+    r = Request(rid=1, prompt=np.array([2]), max_new_tokens=2)
+    assert eng.admit(r) is False
+    assert eng.admit(r) is False
+    assert len(eng.wait_queue) == 1
+
+
+def test_retry_loop_never_requeues_active_or_done_requests(small_model):
+    """The pre-PR launcher pattern `while pending and admit(pending[0])`
+    retries a queued request every tick; once it is draining into a slot
+    (or finished) a re-admit must NOT queue it again — a done request
+    re-placed by _drain_queue would be re-prefilled and re-generated."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64, prefill_chunk=4)
+    r1 = Request(rid=0, prompt=np.array([1, 2]), max_new_tokens=3)
+    r2 = Request(rid=1, prompt=np.array([3, 4]), max_new_tokens=3)
+    ticks = 0
+    while not (r1.done and r2.done) and ticks < 50:
+        for r in (r1, r2):
+            if not r.done:
+                eng.admit(r)     # retried every tick, incl. while active
+        eng.tick()
+        ticks += 1
+    assert r1.done and r2.done
+    assert eng.requests_completed == 2
+    assert len(r1.out_tokens) == 3 and len(r2.out_tokens) == 3
+    assert eng.tokens_generated == 6
+    # a finished request stays finished even if admitted again
+    assert eng.admit(r2) is False
+    assert not eng.wait_queue
+    eng.run_until_done()
+    assert len(r2.out_tokens) == 3 and eng.requests_completed == 2
+
+
+def test_request_latency_stats_populated(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64, prefill_chunk=4)
+    r1 = Request(rid=0, prompt=np.array([1, 2]), max_new_tokens=2)
+    r2 = Request(rid=1, prompt=np.array([3, 4]), max_new_tokens=2)
+    eng.admit(r1)
+    eng.admit(r2)
+    eng.run_until_done()
+    for r in (r1, r2):
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.latency_s is not None and r.latency_s >= r.ttft_s - 1e-9
+        assert r.tokens_per_s and r.tokens_per_s > 0
+    assert r2.queue_wait_s > 0       # r2 sat in the queue
+    st = eng.stats()
+    assert st["requests_completed"] == 2
+    assert st["prefill_launches"] == 2   # 2 prompts, 1 chunk each
+    assert st["decode_launches"] == st["ticks"]
+
+
+# --------------------------------------------------- decode-fn LRU cache
+def test_decode_cache_lru_bounded(small_model, monkeypatch):
+    from collections import OrderedDict
+
+    from repro.serve import engine as engine_mod
+
+    cfg, params = small_model
+    monkeypatch.setattr(engine_mod, "_DECODE_CACHE", OrderedDict())
+    monkeypatch.setattr(engine_mod, "_DECODE_CACHE_CAP", 2)
+    monkeypatch.setattr(engine_mod, "_DECODE_CACHE_EVICTIONS", 0)
+    fn1, hit1 = engine_mod._decode_fn(cfg, 1)
+    fn2, hit2 = engine_mod._decode_fn(cfg, 2)
+    assert (hit1, hit2) == (False, False)
+    _, hit1b = engine_mod._decode_fn(cfg, 1)
+    assert hit1b is True             # LRU refresh, no rebuild
+    engine_mod._decode_fn(cfg, 3)    # evicts pool=2 (least recently used)
+    assert len(engine_mod._DECODE_CACHE) == 2
+    assert engine_mod._DECODE_CACHE_EVICTIONS == 1
+    _, hit2b = engine_mod._decode_fn(cfg, 2)
+    assert hit2b is False            # evicted -> rebuilt
+    _, hit1c = engine_mod._decode_fn(cfg, 1)
+    assert hit1c is False            # pool=1 was evicted by the rebuild
+    assert engine_mod.decode_cache_stats()["evictions"] >= 2

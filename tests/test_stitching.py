@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import compile_and_compare
+from conftest import compile_and_compare, make_feeds as _feeds
 from repro.core import (
     CONSISTENT,
     INFEASIBLE,
@@ -52,11 +52,6 @@ def _members(module):
     return [i for i in module.instructions if i.opcode != "parameter"]
 
 
-def _feeds(module, rng):
-    return {
-        p.name: rng.uniform(-1, 1, size=p.shape).astype(np.dtype(p.dtype))
-        for p in module.parameters
-    }
 
 
 # ------------------------------------------------------- three-way verdict
