@@ -7,7 +7,9 @@ Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
     planner emitting MORE kernels than the baseline on any graph
     (``planner/*/kernels`` ``cost=N``), a worse fusion ratio
     (``fusion_ratio/*``), a stitched launch count creeping up
-    (``stitch/*/launch_reduction`` ``stitched=N``), a chunked-prefill
+    (``stitch/*/launch_reduction`` ``stitched=N``), the jaxpr frontend
+    emitting more kernels than its hand-built parity plan
+    (``frontend/*/kernels`` ``stitched=N``), a chunked-prefill
     decode-launch count creeping back toward the per-token O(S) loop
     (``serve_runtime/prefill_launches`` ``chunked=N``), or the traced
     ExecutionPlan replay dispatching more segments per call
@@ -81,6 +83,14 @@ def compare(
                     f"{name}: stitched launch count regressed {b} -> {f}"
                 )
 
+        elif name.startswith("frontend/") and name.endswith("/kernels"):
+            b = _derived_int(base, "stitched")
+            f = _derived_int(cur, "stitched")
+            if b is not None and f is not None and f > b:
+                failures.append(
+                    f"{name}: frontend kernel count regressed {b} -> {f}"
+                )
+
         elif name == "serve_runtime/prefill_launches":
             b = _derived_int(base, "chunked")
             f = _derived_int(cur, "chunked")
@@ -107,6 +117,19 @@ def compare(
                 warnings.append(
                     f"{name}: modeled latency drifted "
                     f"{b:.2f}us -> {f:.2f}us (> {latency_tolerance:.0%})"
+                )
+
+    # frontend parity is also checked WITHIN each fresh row (hand= is the
+    # ground truth the row carries), independent of the baseline — a blind
+    # baseline regen can never bake in a lowering drift from the hand plan
+    for name, cur in sorted(fresh.items()):
+        if name.startswith("frontend/") and name.endswith("/kernels"):
+            fh = _derived_int(cur, "hand")
+            fs = _derived_int(cur, "stitched")
+            if fh is not None and fs is not None and fs > fh:
+                failures.append(
+                    f"{name}: jaxpr frontend emits {fs} kernels vs the "
+                    f"hand-built plan's {fh} (lowering drifted from parity)"
                 )
 
     for name in sorted(set(fresh) - set(baseline)):

@@ -8,6 +8,7 @@ subgraph on marginal batched shapes, fused per the user decision).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -247,6 +248,96 @@ def stitch_pipeline_graph() -> Module:
     t = b.transpose(p, (1, 0))                         # (D, B): the break
     _out = b.tanh(t) * 0.5
     return b.module
+
+
+# --------------------------------------------------------------------------
+# Plain-jnp family (jaxpr-frontend parity): the same computations written as
+# ordinary jax.numpy functions — zero GraphBuilder calls — captured through
+# ``repro.stitch``.  Each entry pairs the jnp function with the hand-built
+# module above so benchmarks and tests can assert the frontend reproduces
+# the hand-built plans (same kernel counts, outputs allclose to jax.jit).
+# --------------------------------------------------------------------------
+
+
+def nmt_fn(q, k, v, bias):
+    """Figure-3 attention (softmax stitched with BatchMatMul) in plain jnp —
+    mirrors ``nmt_graph``."""
+    d = q.shape[-1]
+    kt = jnp.swapaxes(k, -1, -2)
+    scores = jnp.matmul(q, kt)
+    scaled = scores * (1.0 / d ** 0.5) + bias
+    mx = jnp.max(scaled, axis=-1, keepdims=True)
+    e = jnp.exp(scaled - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.tanh(jnp.matmul(p, v))
+
+
+def nmt_args(rng):
+    B, H, S, D = NMT_DIM
+    return (
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(S, S).astype("f4"),
+    )
+
+
+def stacked_fn(x, gains, weights):
+    """Pre-norm transformer-ish blocks in plain jnp — mirrors
+    ``stacked_transformer_graph`` (dots stay library calls: compile with
+    ``fuse_dot=False``)."""
+    for g, W in zip(gains, weights):
+        ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + 1e-6)
+        normed = x * inv * g[None, :]
+        x = x + jax.nn.silu(jnp.matmul(normed, W))
+    return x
+
+
+def stacked_args(rng, num_layers: int = 8):
+    B, D = 16, 64
+    return (
+        rng.randn(B, D).astype("f4"),
+        [rng.randn(D).astype("f4") for _ in range(num_layers)],
+        [rng.randn(D, D).astype("f4") for _ in range(num_layers)],
+    )
+
+
+def reduce_towers_fn(xs, ss):
+    """Independent square/scale/reduce towers in plain jnp — mirrors
+    ``reduce_towers_graph`` (the horizontal-merge adversary)."""
+    outs = []
+    for x, s in zip(xs, ss):
+        e = jnp.square(x * 0.5 + s)
+        outs.append(jnp.sum(e * e))
+    return tuple(outs)
+
+
+def reduce_towers_args(rng, num_towers: int = 6):
+    B, D = 32, 64
+    return (
+        [rng.randn(B, D).astype("f4") for _ in range(num_towers)],
+        [rng.randn(B, D).astype("f4") for _ in range(num_towers)],
+    )
+
+
+#: frontend-parity families: jnp fn + example args + the hand-built module
+#: it must reproduce + the StitchOptions overrides the frontend compiles
+#: under (e.g. Stacked keeps its dots as library calls via fuse_dot=False,
+#: matching the hand-built graph's ``fusable=False`` dots).
+JNP_FAMILIES = {
+    "NMT": {
+        "fn": nmt_fn, "args": nmt_args, "module": nmt_graph, "options": {},
+    },
+    "Stacked": {
+        "fn": stacked_fn, "args": stacked_args,
+        "module": stacked_transformer_graph, "options": {"fuse_dot": False},
+    },
+    "ReduceTowers": {
+        "fn": reduce_towers_fn, "args": reduce_towers_args,
+        "module": reduce_towers_graph, "options": {},
+    },
+}
 
 
 ALL_GRAPHS = {

@@ -309,6 +309,44 @@ def bench_stitching():
     return rows
 
 
+def bench_frontend():
+    """jaxpr-frontend parity: ``repro.stitch`` on plain-jnp functions vs the
+    hand-built StitchIR modules of the same computations — kernel counts
+    must match and the per-shape plan cache must hold (second same-shape
+    call performs no recompile)."""
+    from repro import stitch
+
+    from .graphs import JNP_FAMILIES
+
+    rows = []
+    rng = np.random.RandomState(0)
+    for name, fam in JNP_FAMILIES.items():
+        hand = compile_module(fam["module"](), OPTS)
+        fn = stitch(fam["fn"], options=replace(OPTS, **fam["options"]))
+        args = fam["args"](rng)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = fn(*args)                      # plan-cache hit: no recompile
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        t_warm = time.perf_counter() - t0
+        hk = hand.stats.stitched_kernels + hand.stats.standalone_kernels
+        sk = fn.stats.stitched_kernels + fn.stats.standalone_kernels
+        rows.append(
+            (f"frontend/{name}/kernels", 0.0,
+             f"hand={hk} stitched={sk} library={fn.stats.library_calls} "
+             f"compiles={fn.num_compiles}")
+        )
+        rows.append(
+            (f"frontend/{name}/call", t_warm * 1e6,
+             f"cold_us={t_cold * 1e6:.0f} "
+             f"cache_speedup={t_cold / max(t_warm, 1e-9):.1f}x")
+        )
+    return rows
+
+
 def bench_serve_runtime():
     """Runtime launch accounting (the serving analogue of Fig. 7): chunked
     batched prefill — O(ceil(S/chunk)) masked decode launches per prompt —
@@ -384,6 +422,7 @@ ALL_BENCHES = [
     bench_fusion_planner,
     bench_stitching,
     bench_stitched_kernels,
+    bench_frontend,
     bench_serve_runtime,
 ]
 

@@ -1,8 +1,10 @@
-"""Quickstart: compile the paper's Figure-3 pattern with FusionStitching.
+"""Quickstart: compile the paper's Figure-3 pattern straight from jax.numpy.
 
-Builds softmax(QKᵀ/√d)·V in StitchIR, runs the full pipeline (Work/Span
-deep fusion → schedule tuning → VMEM planning → stitched Pallas codegen),
-validates against the pure-jnp oracle, and prints the paper's metrics.
+``repro.stitch`` is a ``jax.jit``-shaped entry point: it captures a real
+JAX function via jaxpr, lowers it into StitchIR, runs the full pipeline
+(Work/Span deep fusion → schedule tuning → VMEM planning → stitched Pallas
+codegen), and caches the compiled plan per input-shape signature.  No
+hand-built IR anywhere.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,56 +15,53 @@ import jax.numpy as jnp
 
 jax.config.update("jax_platform_name", "cpu")
 
-from repro.core import (  # noqa: E402
-    StitchOptions,
-    compile_module,
-    critical_path_length,
-    reference_execute,
-    trace,
-)
+from repro import StitchOptions, stitch  # noqa: E402
 
 
-def attention(b, q, k, v):
+@stitch(options=StitchOptions(max_blocks=32))
+def attention(q, k, v):
     """The motivating example: BatchMatMul stitched with softmax."""
-    kt = b.transpose(k, (0, 1, 3, 2))
-    scores = b.dot(q, kt, fusable=True) * (1.0 / q.shape[-1] ** 0.5)
-    p = b.softmax(scores, dim=-1)           # max, sub, exp, sum, div
-    return b.dot(p, v, fusable=True)        # Dot.1 in Figure 3
+    d = q.shape[-1]
+    scores = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) * (1.0 / d ** 0.5)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)  # Figure 3:
+    p = jnp.exp(scores)                                        # max, sub, exp,
+    p = p / jnp.sum(p, axis=-1, keepdims=True)                 # sum, div
+    return jnp.matmul(p, v)                                    # Dot.1
 
 
 def main():
     B, H, S, D = 2, 4, 16, 32
-    module = trace(
-        attention,
-        ("q", (B, H, S, D), jnp.float32),
-        ("k", (B, H, S, D), jnp.float32),
-        ("v", (B, H, S, D), jnp.float32),
-        name="fig3",
-    )
-    print(f"StitchIR module: {len(module.instructions)} instructions, "
-          f"critical path {critical_path_length(module)}")
+    rng = np.random.RandomState(0)
+    q, k, v = (jnp.asarray(rng.randn(B, H, S, D).astype("f4")) for _ in range(3))
 
-    compiled = compile_module(module, StitchOptions(max_blocks=32))
-    s = compiled.stats
-    print(f"stitched kernels : {s.stitched_kernels}")
-    print(f"standalone       : {s.standalone_kernels}")
-    print(f"XLA baseline     : {s.xla_baseline_kernels} kernels")
-    print(f"fusion ratio     : {s.fusion_ratio:.3f}  "
+    out = attention(q, k, v)              # traced + lowered + compiled + run
+    s = attention.stats
+    module = attention.lower()
+    print(f"captured StitchIR : {len(module.instructions)} instructions "
+          f"from the jaxpr of attention()")
+    print(f"stitched kernels  : {s.stitched_kernels}")
+    print(f"standalone        : {s.standalone_kernels}")
+    print(f"XLA baseline      : {s.xla_baseline_kernels} kernels")
+    print(f"fusion ratio      : {s.fusion_ratio:.3f}  "
           f"({(1 - s.fusion_ratio) * 100:.0f}% fewer launches)")
     for r in s.reports:
         print(f"  kernel {r.name}: {r.num_ops} ops, {r.blocks} blocks, "
               f"{r.scratch_bytes}B VMEM scratch "
               f"({r.shared_bytes}B shared), roots={r.roots}")
 
-    rng = np.random.RandomState(0)
-    feeds = {n: rng.randn(B, H, S, D).astype("f4") for n in ("q", "k", "v")}
-    ref = reference_execute(module, feeds)
-    out = compiled(feeds)
-    for k in ref:
-        np.testing.assert_allclose(
-            np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=2e-5
-        )
-    print("stitched kernels match the jnp oracle ✓")
+    # bit-validate against plain jax.jit of the SAME function
+    ref = jax.jit(attention.__wrapped__)(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+    )
+    print("stitched kernels match jax.jit of the same function ✓")
+
+    # per-shape plan caching: a second same-shape call performs no recompile
+    before = attention.num_compiles
+    attention(q, k, v)
+    assert attention.num_compiles == before, "same-shape call recompiled!"
+    print(f"plan cache holds  : {attention.num_compiles} compile(s) "
+          f"after a repeated call ✓")
 
 
 if __name__ == "__main__":

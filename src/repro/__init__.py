@@ -1,4 +1,48 @@
 """repro — FusionStitching (Long et al., 2018) reproduced as a production
 JAX/Pallas TPU framework: stitching compiler core, stitched kernels, model
-zoo, distributed training/serving substrate, multi-pod launch tooling."""
-__version__ = "1.0.0"
+zoo, distributed training/serving substrate, multi-pod launch tooling.
+
+Public surface:
+
+  * ``repro.stitch`` — the jit-shaped frontend: capture a real ``jax.numpy``
+    function into StitchIR and compile it through the stitching pipeline
+    (``StitchedFunction``, ``UnsupportedPrimitiveError``).
+  * ``repro.StitchOptions`` — compile options (planner, budgets, stitching).
+  * ``repro.compile_module`` / ``repro.trace`` / ``repro.GraphBuilder`` —
+    the documented low-level path for hand-built StitchIR.
+"""
+__version__ = "1.1.0"
+
+from .core import (  # noqa: F401
+    CompiledModule,
+    CompileStats,
+    GraphBuilder,
+    Module,
+    StitchOptions,
+    compile_module,
+    reference_execute,
+    trace,
+)
+from .frontend import (  # noqa: F401
+    SUPPORTED_PRIMITIVES,
+    StitchedFunction,
+    UnsupportedPrimitiveError,
+    lower_jaxpr,
+    stitch,
+)
+
+__all__ = [
+    "stitch",
+    "StitchOptions",
+    "StitchedFunction",
+    "UnsupportedPrimitiveError",
+    "SUPPORTED_PRIMITIVES",
+    "lower_jaxpr",
+    "CompiledModule",
+    "CompileStats",
+    "GraphBuilder",
+    "Module",
+    "compile_module",
+    "reference_execute",
+    "trace",
+]

@@ -60,6 +60,31 @@ class StitchOptions:
     # tuned/emitted).
     jit_replay: bool = True
 
+    VALID_PLANNERS = ("cost", "greedy")
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Reject option values the pipeline would otherwise misread (an
+        unknown planner string used to silently behave as "greedy")."""
+        if self.planner not in self.VALID_PLANNERS:
+            raise ValueError(
+                f"unknown planner {self.planner!r}; valid choices: "
+                f"{', '.join(self.VALID_PLANNERS)}"
+            )
+        for name in ("vmem_limit", "replicate_limit", "max_blocks",
+                     "ew_footprint_limit", "max_fusion_ops",
+                     "stitch_max_blocks"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+        if self.stitch_replicate_limit is not None and self.stitch_replicate_limit < 0:
+            raise ValueError(
+                f"stitch_replicate_limit must be >= 0 (or None), got "
+                f"{self.stitch_replicate_limit}"
+            )
+
 
 @dataclass
 class FusionReport:

@@ -68,6 +68,12 @@ _BCAST_EXPAND_FACTOR = 8
 def fusable_member(instr: Instruction, fuse_dot: bool) -> bool:
     if instr.opcode == "dot":
         return fuse_dot and instr.attrs.get("fusable", False)
+    if instr.opcode == "constant":
+        # Pallas kernel bodies can only inline SCALAR constants (an array
+        # would be a captured closure constant, which pallas_call rejects);
+        # array constants stay kernel inputs, folded once at plan-build
+        # time into the executor's buffer template.
+        return instr.num_elements == 1
     return instr.opcode in FUSABLE_OPCODES
 
 
@@ -814,6 +820,12 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
         while stack:
             o = stack.pop()
             if o in members or o.id in assigned or o.opcode == "parameter":
+                continue
+            if o.opcode == "constant" and o.num_elements > 1:
+                # Pallas kernel bodies can only inline SCALAR constants
+                # (arrays would be captured closure constants, which
+                # pallas_call rejects); array constants stay kernel inputs,
+                # folded once at plan-build time into the buffer template.
                 continue
             if constant_like(o):
                 members.add(o)

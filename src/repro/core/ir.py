@@ -174,9 +174,15 @@ class Module:
         self.parameters: List[Instruction] = []
 
     def add(self, instr: Instruction) -> Instruction:
-        self.instructions.append(instr)
         if instr.opcode == "parameter":
+            if any(p.name == instr.name for p in self.parameters):
+                raise ValueError(
+                    f"duplicate parameter name {instr.name!r} in module "
+                    f"{self.name!r} — parameter names key the feed dict, so "
+                    "a later parameter would silently shadow the earlier one"
+                )
             self.parameters.append(instr)
+        self.instructions.append(instr)
         return instr
 
     @property
@@ -263,6 +269,9 @@ def apply_op(instr: Instruction, *vals, shape_override: Optional[Tuple[int, ...]
     a = instr.attrs
     if op == "elementwise":
         fn = a["fn"]
+        if fn == "convert":
+            # dtype cast: the target dtype is the instruction's own dtype
+            return vals[0].astype(instr.dtype)
         if fn in ELEMENTWISE_UNARY:
             return ELEMENTWISE_UNARY[fn](vals[0])
         out = ELEMENTWISE_BINARY[fn](vals[0], vals[1])
@@ -423,6 +432,14 @@ class GraphBuilder:
 
     def select(self, pred: Tensor, t: Tensor, f: Tensor) -> Tensor:
         return self._emit("select", t.shape, t.dtype, [pred, t, f])
+
+    def convert(self, x: Tensor, dtype) -> Tensor:
+        """Elementwise dtype cast (``convert_element_type``); identity when
+        the dtype already matches."""
+        dtype = np.dtype(dtype)
+        if np.dtype(x.dtype) == dtype:
+            return x
+        return self._emit("elementwise", x.shape, dtype, [x], {"fn": "convert"})
 
     def reshape(self, x: Tensor, new_shape) -> Tensor:
         new_shape = tuple(int(s) for s in new_shape)

@@ -1,0 +1,34 @@
+"""repro.frontend — capture real JAX functions into StitchIR.
+
+``stitch`` is the jit-shaped public entry point (see ``api``);
+``lower_jaxpr`` is the jaxpr -> StitchIR lowering it drives (see
+``jaxpr_lower``).
+"""
+from .api import StitchedFunction, stitch
+from .jaxpr_lower import (
+    BINARY_PRIMS,
+    CALL_PRIMS,
+    IDENTITY_PRIMS,
+    REDUCE_PRIMS,
+    STRUCTURAL_PRIMS,
+    SUPPORTED_PRIMITIVES,
+    UNARY_PRIMS,
+    LoweredJaxpr,
+    UnsupportedPrimitiveError,
+    lower_jaxpr,
+)
+
+__all__ = [
+    "StitchedFunction",
+    "stitch",
+    "LoweredJaxpr",
+    "UnsupportedPrimitiveError",
+    "lower_jaxpr",
+    "SUPPORTED_PRIMITIVES",
+    "UNARY_PRIMS",
+    "BINARY_PRIMS",
+    "REDUCE_PRIMS",
+    "STRUCTURAL_PRIMS",
+    "IDENTITY_PRIMS",
+    "CALL_PRIMS",
+]

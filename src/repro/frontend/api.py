@@ -1,0 +1,259 @@
+"""``repro.stitch`` — a ``jax.jit``-shaped frontend for the compiler.
+
+    from repro import stitch
+
+    @stitch
+    def attention(q, k, v):
+        s = q @ jnp.swapaxes(k, -1, -2) / q.shape[-1] ** 0.5
+        p = jax.nn.softmax(s, axis=-1)
+        return p @ v
+
+    out = attention(q, k, v)        # traced, lowered, compiled, executed
+    print(attention.report())       # kernels / fusion ratio / VMEM plan
+
+``stitch(fn)`` returns a ``StitchedFunction``: calling it traces ``fn`` with
+``jax.make_jaxpr`` on the arguments' shapes/dtypes, lowers the jaxpr into
+StitchIR (``jaxpr_lower``), runs the unchanged pass pipeline via
+``compile_module``, and executes the planned runtime.  Compiled plans are
+cached per input-signature (pytree structure + leaf shapes/dtypes), so
+repeated calls at the same shapes never recompile, and the per-function
+``KernelCache`` is shared across signatures so a new shape reuses tuned
+kernels where fusion signatures coincide.
+
+``compile_module``/``trace`` remain the documented low-level path for
+hand-built StitchIR.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.compiler import (
+    CompiledModule,
+    CompileStats,
+    StitchOptions,
+    compile_module,
+)
+from ..core.ir import Module
+from ..core.signature import KernelCache
+from .jaxpr_lower import LoweredJaxpr, UnsupportedPrimitiveError, lower_jaxpr
+
+_FALLBACK_MODES = ("error", "fallback")
+
+
+@dataclass
+class _PlanEntry:
+    """One compiled (or fallen-back) plan for one input signature."""
+
+    lowered: Optional[LoweredJaxpr]      # None => fallback entry
+    compiled: Optional[CompiledModule]
+    out_tree: Any
+
+    @property
+    def is_fallback(self) -> bool:
+        return self.lowered is None
+
+
+def _leaf_spec(leaf) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.shape(leaf), jnp.result_type(leaf))
+
+
+class StitchedFunction:
+    """A JAX function captured into StitchIR and compiled per input shape.
+
+    Attributes/methods of note:
+      * ``.options``       — the ``StitchOptions`` this function compiles under
+      * ``.stats``         — ``CompileStats`` of the most recent compile
+      * ``.lower(*args)``  — the captured StitchIR ``Module`` (no compile)
+      * ``.report()``      — human-readable compile report
+      * ``.num_compiles`` / ``.num_fallbacks`` — plan-cache accounting
+    """
+
+    def __init__(
+        self,
+        fn: Callable,
+        options: Optional[StitchOptions] = None,
+        on_unsupported: str = "error",
+        name: Optional[str] = None,
+    ):
+        if not callable(fn):
+            raise TypeError(f"stitch() requires a callable, got {type(fn).__name__}")
+        if on_unsupported not in _FALLBACK_MODES:
+            raise ValueError(
+                f"on_unsupported={on_unsupported!r}; valid modes: "
+                f"{', '.join(_FALLBACK_MODES)}"
+            )
+        self._fn = fn
+        self.options = options if options is not None else StitchOptions()
+        self.on_unsupported = on_unsupported
+        self.name = name or getattr(fn, "__name__", "stitched")
+        self._plans: Dict[Any, _PlanEntry] = {}
+        self._kernel_cache = KernelCache(self.options.kernel_cache_path)
+        self._fallback_jit: Optional[Callable] = None
+        self._last: Optional[_PlanEntry] = None
+        self.num_compiles = 0
+        self.num_fallbacks = 0
+        functools.update_wrapper(self, fn)
+
+    # -- plan cache -------------------------------------------------------
+    def _signature(self, args, kwargs):
+        leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+        return (
+            treedef,
+            tuple(
+                (tuple(np.shape(l)), str(jnp.result_type(l))) for l in leaves
+            ),
+        ), leaves
+
+    def _trace(self, args, kwargs):
+        """jax.make_jaxpr on the arguments' shapes (no values traced)."""
+        shaped_args, shaped_kwargs = jax.tree_util.tree_map(
+            _leaf_spec, (args, kwargs)
+        )
+        closed, out_shape = jax.make_jaxpr(self._fn, return_shape=True)(
+            *shaped_args, **shaped_kwargs
+        )
+        return closed, jax.tree_util.tree_structure(out_shape)
+
+    def _compile(self, key, args, kwargs) -> _PlanEntry:
+        closed, out_tree = self._trace(args, kwargs)
+        try:
+            lowered = lower_jaxpr(
+                closed, name=self.name, fuse_dot=self.options.fuse_dot
+            )
+        except UnsupportedPrimitiveError:
+            if self.on_unsupported != "fallback":
+                raise
+            if self._fallback_jit is None:
+                self._fallback_jit = jax.jit(self._fn)
+            self.num_fallbacks += 1
+            entry = _PlanEntry(None, None, out_tree)
+            self._plans[key] = entry
+            return entry
+        compiled = compile_module(
+            lowered.module, self.options, kernel_cache=self._kernel_cache
+        )
+        self.num_compiles += 1
+        entry = _PlanEntry(lowered, compiled, out_tree)
+        self._plans[key] = entry
+        self._last = entry
+        return entry
+
+    # -- the jit-shaped surface -------------------------------------------
+    def __call__(self, *args, **kwargs):
+        key, leaves = self._signature(args, kwargs)
+        entry = self._plans.get(key)
+        if entry is None:
+            entry = self._compile(key, args, kwargs)
+        if entry.is_fallback:
+            return self._fallback_jit(*args, **kwargs)
+        feeds = dict(zip(entry.lowered.param_names, leaves))
+        out = entry.compiled(feeds)
+        flat = [out[n] for n in entry.lowered.output_names]
+        return jax.tree_util.tree_unflatten(entry.out_tree, flat)
+
+    def lower(self, *args, **kwargs) -> Module:
+        """The captured StitchIR ``Module``.
+
+        With arguments (arrays or ``ShapeDtypeStruct``s): trace+lower for
+        those shapes without compiling.  Without arguments: the module of
+        the most recent compiled call.
+        """
+        if args or kwargs:
+            key, _ = self._signature(args, kwargs)
+            entry = self._plans.get(key)
+            if entry is not None and not entry.is_fallback:
+                return entry.lowered.module
+            closed, _ = self._trace(args, kwargs)
+            return lower_jaxpr(
+                closed, name=self.name, fuse_dot=self.options.fuse_dot
+            ).module
+        if self._last is None:
+            raise ValueError(
+                f"{self.name} has not been compiled yet — call it (or pass "
+                "example arguments to .lower())"
+            )
+        return self._last.lowered.module
+
+    @property
+    def stats(self) -> CompileStats:
+        """CompileStats of the most recent compile."""
+        if self._last is None:
+            if self.num_fallbacks:
+                raise ValueError(
+                    f"{self.name} has no compile stats: all "
+                    f"{self.num_fallbacks} signature(s) fell back to plain "
+                    "jax.jit (on_unsupported='fallback'), so nothing was "
+                    "captured into StitchIR"
+                )
+            raise ValueError(
+                f"{self.name} has not been compiled yet — call it first"
+            )
+        return self._last.compiled.stats
+
+    def report(self) -> str:
+        """Human-readable summary of the most recent compile."""
+        s = self.stats
+        m = self._last.lowered.module
+        lines = [
+            f"stitched function {self.name}: "
+            f"{len(m.instructions)} StitchIR instructions, "
+            f"{len(m.parameters)} parameters",
+            f"  stitched kernels : {s.stitched_kernels}",
+            f"  standalone       : {s.standalone_kernels}",
+            f"  library calls    : {s.library_calls}",
+            f"  XLA baseline     : {s.xla_baseline_kernels} kernels "
+            f"(fusion ratio {s.fusion_ratio:.3f})",
+            f"  plan cache       : {len(self._plans)} signature(s), "
+            f"{self.num_compiles} compile(s), {self.num_fallbacks} fallback(s)",
+        ]
+        for r in s.reports:
+            lines.append(
+                f"    kernel {r.name}: {r.num_ops} ops, {r.blocks} blocks, "
+                f"{r.scratch_bytes}B VMEM scratch, roots={r.roots}"
+            )
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (
+            f"StitchedFunction({self.name}, planner={self.options.planner!r}, "
+            f"{len(self._plans)} cached plan(s))"
+        )
+
+
+def stitch(
+    fn: Optional[Callable] = None,
+    *,
+    options: Optional[StitchOptions] = None,
+    on_unsupported: str = "error",
+    name: Optional[str] = None,
+) -> StitchedFunction:
+    """Capture a JAX function into StitchIR and compile it per input shape.
+
+    Usable directly (``stitched = stitch(fn)``) or as a decorator, bare or
+    parameterized::
+
+        @stitch
+        def f(x): ...
+
+        @stitch(options=StitchOptions(planner="greedy"))
+        def g(x): ...
+
+    ``on_unsupported``: ``"error"`` (default) raises
+    ``UnsupportedPrimitiveError`` when the function uses a primitive outside
+    the supported set; ``"fallback"`` executes the whole function through
+    plain ``jax.jit`` instead, so partial coverage never blocks a caller.
+    """
+    if fn is None:
+        return functools.partial(
+            stitch, options=options, on_unsupported=on_unsupported, name=name
+        )
+    return StitchedFunction(
+        fn, options=options, on_unsupported=on_unsupported, name=name
+    )
