@@ -15,7 +15,12 @@ Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
     ExecutionPlan replay dispatching more segments per call
     (``serve_runtime/*`` ``traced=N``);
   * **warnings** (exit 0) when modeled latency (``planner/*/predicted_us``)
-    drifts past the tolerance (default ±15%).
+    drifts past the tolerance (default ±15%), or when the analytic model's
+    measured error (``autotune/*/model_error_pct``) drifts past
+    ``--error-tolerance-pct`` (default ±25 percentage points).
+
+Every hard failure names the offending row, the graph, the metric that
+tripped, and both raw ``derived`` strings — no JSON diffing needed.
 
 Rows only present in the baseline are skipped (CI's fast lane runs a bench
 subset); rows only present in the fresh run are reported as new.
@@ -48,10 +53,29 @@ def _derived_float(row: dict) -> Optional[float]:
         return None
 
 
+def _graph_of(name: str) -> str:
+    """The graph segment of a row name (``planner/NMT/kernels`` -> NMT)."""
+    parts = name.split("/")
+    return parts[1] if len(parts) > 1 else parts[0]
+
+
+def _fail_msg(
+    name: str, metric: str, what: str, base: dict, cur: dict
+) -> str:
+    """One self-diagnosing hard-fail line: graph, metric, what moved, and
+    both raw derived strings so nobody has to diff JSON by hand."""
+    return (
+        f"{name} [graph={_graph_of(name)} metric={metric}]: {what}\n"
+        f"      baseline derived={base.get('derived')!r}\n"
+        f"      fresh    derived={cur.get('derived')!r}"
+    )
+
+
 def compare(
     baseline: Dict[str, dict],
     fresh: Dict[str, dict],
     latency_tolerance: float = 0.15,
+    error_tolerance_pct: float = 25.0,
 ) -> Tuple[List[str], List[str], List[str]]:
     """Returns (hard_failures, warnings, notes)."""
     failures: List[str] = []
@@ -66,39 +90,51 @@ def compare(
         if name.startswith("planner/") and name.endswith("/kernels"):
             b, f = _derived_int(base, "cost"), _derived_int(cur, "cost")
             if b is not None and f is not None and f > b:
-                failures.append(
-                    f"{name}: planner kernel count regressed {b} -> {f}"
-                )
+                failures.append(_fail_msg(
+                    name, "cost",
+                    f"planner kernel count regressed {b} -> {f}",
+                    base, cur,
+                ))
 
         elif name.startswith("fusion_ratio/"):
             b, f = _derived_float(base), _derived_float(cur)
             if b is not None and f is not None and f > b + 1e-9:
-                failures.append(f"{name}: fusion ratio regressed {b} -> {f}")
+                failures.append(_fail_msg(
+                    name, "fusion_ratio",
+                    f"fusion ratio regressed {b} -> {f}",
+                    base, cur,
+                ))
 
         elif name.startswith("stitch/") and name.endswith("/launch_reduction"):
             b = _derived_int(base, "stitched")
             f = _derived_int(cur, "stitched")
             if b is not None and f is not None and f > b:
-                failures.append(
-                    f"{name}: stitched launch count regressed {b} -> {f}"
-                )
+                failures.append(_fail_msg(
+                    name, "stitched",
+                    f"stitched launch count regressed {b} -> {f}",
+                    base, cur,
+                ))
 
         elif name.startswith("frontend/") and name.endswith("/kernels"):
             b = _derived_int(base, "stitched")
             f = _derived_int(cur, "stitched")
             if b is not None and f is not None and f > b:
-                failures.append(
-                    f"{name}: frontend kernel count regressed {b} -> {f}"
-                )
+                failures.append(_fail_msg(
+                    name, "stitched",
+                    f"frontend kernel count regressed {b} -> {f}",
+                    base, cur,
+                ))
 
         elif name == "serve_runtime/prefill_launches":
             b = _derived_int(base, "chunked")
             f = _derived_int(cur, "chunked")
             if b is not None and f is not None and f > b:
-                failures.append(
-                    f"{name}: chunked prefill launch count regressed "
-                    f"{b} -> {f} (toward the per-token O(S) loop)"
-                )
+                failures.append(_fail_msg(
+                    name, "chunked",
+                    f"chunked prefill launch count regressed {b} -> {f} "
+                    f"(toward the per-token O(S) loop)",
+                    base, cur,
+                ))
 
         elif name.startswith("serve_runtime/") and (
             name.endswith("/replay") or name.endswith("/replay_dispatches")
@@ -106,10 +142,11 @@ def compare(
             b = _derived_int(base, "traced")
             f = _derived_int(cur, "traced")
             if b is not None and f is not None and f > b:
-                failures.append(
-                    f"{name}: traced replay dispatch count regressed "
-                    f"{b} -> {f}"
-                )
+                failures.append(_fail_msg(
+                    name, "traced",
+                    f"traced replay dispatch count regressed {b} -> {f}",
+                    base, cur,
+                ))
 
         elif name.startswith("planner/") and name.endswith("/predicted_us"):
             b, f = base.get("us_per_call"), cur.get("us_per_call")
@@ -117,6 +154,17 @@ def compare(
                 warnings.append(
                     f"{name}: modeled latency drifted "
                     f"{b:.2f}us -> {f:.2f}us (> {latency_tolerance:.0%})"
+                )
+
+        elif name.startswith("autotune/") and name.endswith("/model_error_pct"):
+            b, f = _derived_float(base), _derived_float(cur)
+            if b is not None and f is not None and abs(f - b) > error_tolerance_pct:
+                trend = "worsened" if f > b else "improved"
+                warnings.append(
+                    f"{name}: model-vs-measured error {trend} "
+                    f"{b:.1f}% -> {f:.1f}% (drift > "
+                    f"{error_tolerance_pct:.0f} points; if real, the "
+                    f"LatencyModel constants deserve a look)"
                 )
 
     # frontend parity is also checked WITHIN each fresh row (hand= is the
@@ -127,10 +175,12 @@ def compare(
             fh = _derived_int(cur, "hand")
             fs = _derived_int(cur, "stitched")
             if fh is not None and fs is not None and fs > fh:
-                failures.append(
-                    f"{name}: jaxpr frontend emits {fs} kernels vs the "
-                    f"hand-built plan's {fh} (lowering drifted from parity)"
-                )
+                failures.append(_fail_msg(
+                    name, "hand/stitched",
+                    f"jaxpr frontend emits {fs} kernels vs the hand-built "
+                    f"plan's {fh} (lowering drifted from parity)",
+                    cur, cur,
+                ))
 
     for name in sorted(set(fresh) - set(baseline)):
         notes.append(f"{name}: new row (not in baseline)")
@@ -147,9 +197,19 @@ def main(argv=None) -> int:
         default=0.15,
         help="relative modeled-latency drift that triggers a warning",
     )
+    ap.add_argument(
+        "--error-tolerance-pct",
+        type=float,
+        default=25.0,
+        help="model-vs-measured error drift (percentage points, "
+        "autotune/*/model_error_pct) that triggers a warning",
+    )
     args = ap.parse_args(argv)
     failures, warnings, notes = compare(
-        load_rows(args.baseline), load_rows(args.fresh), args.latency_tolerance
+        load_rows(args.baseline),
+        load_rows(args.fresh),
+        args.latency_tolerance,
+        args.error_tolerance_pct,
     )
     for n in notes:
         print(f"NOTE  {n}")

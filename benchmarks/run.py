@@ -411,6 +411,48 @@ def bench_serve_runtime():
     return rows
 
 
+# --autotune-graphs: None = every bench graph (full baseline runs); CI's
+# fast lane narrows this to two graphs for an interpret-mode smoke signal.
+AUTOTUNE_GRAPHS = None
+
+
+def bench_autotune():
+    """Measured-cost autotuning loop (core/measure.py): per graph, a cold
+    autotune compile times every unique kernel (interpret mode on CPU), then
+    a warm compile re-plans against the store.  The model_error_pct rows put
+    the analytic LatencyModel's error per graph into baseline.json — in
+    interpret mode the 'device' is the Pallas interpreter, so errors are
+    large and only their *drift* is meaningful (compare.py warns past ±25
+    points)."""
+    from repro.core import MeasuredCostStore
+    from repro.core.measure import device_fingerprint
+
+    rows = []
+    names = AUTOTUNE_GRAPHS or list(ALL_GRAPHS)
+    opts = replace(OPTS, autotune=True, measure_repeats=3)
+    for name in names:
+        module_fn = ALL_GRAPHS[name]
+        store = MeasuredCostStore(
+            device_fp=device_fingerprint(interpret=opts.interpret)
+        )
+        cold = compile_module(module_fn(), opts, measured_store=store)
+        warm = compile_module(module_fn(), opts, measured_store=store)
+        s = warm.stats
+        err = s.model_error_pct
+        rows.append(
+            (f"autotune/{name}/model_error_pct", 0.0,
+             round(err, 1) if err is not None else "n/a")
+        )
+        rows.append(
+            (f"autotune/{name}/store", 0.0,
+             f"measured={cold.stats.measurements_taken} "
+             f"warm_hits={s.measured_hits} "
+             f"warm_measured={s.measurements_taken} "
+             f"kernels={s.stitched_kernels + s.standalone_kernels}")
+        )
+    return rows
+
+
 ALL_BENCHES = [
     bench_fusion_ratio,
     bench_speedup,
@@ -424,6 +466,7 @@ ALL_BENCHES = [
     bench_stitched_kernels,
     bench_frontend,
     bench_serve_runtime,
+    bench_autotune,
 ]
 
 
@@ -439,7 +482,42 @@ def main(argv=None) -> None:
         default=None,
         help="also write rows as JSON (CI uploads this as an artifact)",
     )
+    ap.add_argument(
+        "--repeat",
+        type=int,
+        default=1,
+        metavar="N",
+        help="run each bench N times after one warmup run and report the "
+        "median us_per_call per row (derived from the last run) — measured "
+        "rows in baseline.json need this to be stable enough to gate on",
+    )
+    ap.add_argument(
+        "--autotune",
+        action="store_true",
+        help="include the measured-cost autotuning bench even when --only "
+        "selects other benches",
+    )
+    ap.add_argument(
+        "--autotune-graphs",
+        default=None,
+        metavar="NAMES",
+        help="comma-separated graph names for bench_autotune "
+        "(default: every bench graph)",
+    )
     args = ap.parse_args(argv)
+    if args.repeat < 1:
+        ap.error(f"--repeat must be >= 1, got {args.repeat}")
+    global AUTOTUNE_GRAPHS
+    if args.autotune_graphs is not None:
+        names = [g.strip() for g in args.autotune_graphs.split(",") if g.strip()]
+        unknown = [g for g in names if g not in ALL_GRAPHS]
+        if not names or unknown:
+            ap.error(
+                f"--autotune-graphs: unknown graph(s) "
+                f"{', '.join(unknown) or args.autotune_graphs!r}; "
+                f"valid: {', '.join(ALL_GRAPHS)}"
+            )
+        AUTOTUNE_GRAPHS = names
     wanted = None
     if args.only is not None:
         wanted = [w.strip() for w in args.only.split(",") if w.strip()]
@@ -452,12 +530,27 @@ def main(argv=None) -> None:
                 f"--only matched nothing for {', '.join(sorted(unknown)) or args.only!r}; "
                 f"valid bench names: {', '.join(valid)}"
             )
+        if args.autotune and not any(w in "bench_autotune" for w in wanted):
+            wanted.append("autotune")
     rows = []
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:
         if wanted and not any(w in bench.__name__ for w in wanted):
             continue
-        for name, us, derived in bench():
+        if args.repeat > 1:
+            bench()                          # warmup: traces/compiles settle
+            runs = [bench() for _ in range(args.repeat)]
+            by_name = {}
+            for run_rows in runs:
+                for name, us, _ in run_rows:
+                    by_name.setdefault(name, []).append(us)
+            bench_rows = [
+                (name, float(np.median(by_name[name])), derived)
+                for name, _, derived in runs[-1]
+            ]
+        else:
+            bench_rows = bench()
+        for name, us, derived in bench_rows:
             rows.append({"name": name, "us_per_call": us, "derived": derived})
             print(f"{name},{us:.2f},{derived}")
     if args.json_out:

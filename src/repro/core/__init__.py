@@ -5,7 +5,17 @@ deduplication (``signature``) and a planned buffer-table runtime
 (``executor``)."""
 from .compiler import CompiledModule, CompileStats, StitchOptions, compile_module
 from .executor import ExecutionPlan, StitchedExecutable, reference_execute
+from .measure import (
+    MeasuredCost,
+    MeasuredCostStore,
+    device_fingerprint,
+    emit_group,
+    measure_callable,
+    measure_group,
+    measure_kernel,
+)
 from .pipeline import (
+    AutotunePass,
     CodegenPass,
     CompilationState,
     FinalizePass,
@@ -67,7 +77,9 @@ __all__ = [
     "CompiledModule", "CompileStats", "StitchOptions", "compile_module",
     "StitchedExecutable", "ExecutionPlan", "reference_execute",
     "CompilationState", "PassPipeline", "default_pipeline", "FusionPass",
-    "SchedulePass", "MemoryPass", "CodegenPass", "FinalizePass",
+    "SchedulePass", "MemoryPass", "CodegenPass", "AutotunePass", "FinalizePass",
+    "MeasuredCost", "MeasuredCostStore", "device_fingerprint",
+    "measure_callable", "measure_kernel", "emit_group", "measure_group",
     "KernelCache", "CacheEntry", "fusion_signature", "FusedComputation",
     "FusionConfig", "FusionPlan", "FusionScorer", "PlannerStats", "deep_fuse",
     "DeviceSpec", "LatencyModel", "instr_flops", "GraphBuilder", "Instruction",

@@ -59,6 +59,16 @@ class StitchOptions:
     # fingerprint (it changes how a plan is replayed, never what is
     # tuned/emitted).
     jit_replay: bool = True
+    # Measured-cost autotuning (core/measure.py).  autotune=True times each
+    # unique emitted kernel (warmup + median-of-measure_repeats) and files
+    # the result in a MeasuredCostStore; the planner prefers stored
+    # measurements over the analytic LatencyModel whenever a key hits.
+    # tuning_store_path persists the store as JSON beside the kernel-cache
+    # records; setting only the path reads an existing store without taking
+    # new measurements.  All three salt the kernel-cache options fingerprint.
+    autotune: bool = False
+    measure_repeats: int = 5
+    tuning_store_path: Optional[str] = None
 
     VALID_PLANNERS = ("cost", "greedy")
 
@@ -83,6 +93,10 @@ class StitchOptions:
             raise ValueError(
                 f"stitch_replicate_limit must be >= 0 (or None), got "
                 f"{self.stitch_replicate_limit}"
+            )
+        if self.measure_repeats < 1:
+            raise ValueError(
+                f"measure_repeats must be >= 1, got {self.measure_repeats}"
             )
 
 
@@ -146,6 +160,15 @@ class CompileStats:
     eager_dispatches_per_call: int = 0       # steps the eager loop runs
     traced_dispatches_per_call: int = 1      # jitted replay segments
     donated_buffers: int = 0                 # dead segment inputs donated
+    # measured-cost autotuning accounting (core/measure.py): store lookups
+    # THIS compile (scorer candidates + schedule-pass entries), kernels
+    # timed on device this compile, and the analytic model's mean relative
+    # error over every entry with both costs known.  None = no entry had a
+    # measurement (autotune off, or fully cold with measurement disabled).
+    measured_hits: int = 0
+    measured_misses: int = 0
+    measurements_taken: int = 0
+    model_error_pct: Optional[float] = None
 
     @property
     def replay_dispatch_reduction(self) -> int:
@@ -275,6 +298,16 @@ def build_outputs(state: CompilationState) -> None:
         and not i.is_library_call
     )
     pstats = state.fusion_plan.planner
+    mstore = state.measured_store
+    m_hits = mstore.hits - state.measured_base_hits if mstore else 0
+    m_misses = mstore.misses - state.measured_base_misses if mstore else 0
+    errors = [
+        abs(e.model_cost_s - e.measured_cost_s) / e.measured_cost_s * 100.0
+        for e in {id(p.entry): p.entry for p in state.planned}.values()
+        if e.model_cost_s is not None
+        and e.measured_cost_s is not None
+        and e.measured_cost_s > 0.0
+    ]
     state.executable = executable
     state.stats = CompileStats(
         stitched_kernels=st.stitched_kernels,
@@ -308,6 +341,10 @@ def build_outputs(state: CompilationState) -> None:
         eager_dispatches_per_call=st.eager_dispatches_per_call,
         traced_dispatches_per_call=st.traced_dispatches_per_call,
         donated_buffers=st.donated_buffers,
+        measured_hits=m_hits,
+        measured_misses=m_misses,
+        measurements_taken=state.measurements_taken,
+        model_error_pct=float(np.mean(errors)) if errors else None,
     )
 
 
@@ -315,24 +352,41 @@ def compile_module(
     module,
     options: Optional[StitchOptions] = None,
     kernel_cache: Optional[KernelCache] = None,
+    measured_store=None,
 ) -> CompiledModule:
     """Compile a StitchIR module through the default pass pipeline.
 
     ``kernel_cache`` may be shared across calls so repeated compiles of
     structurally-identical graphs (per-layer blocks, per-request recompiles)
-    reuse tuned schedules and emitted kernels.
+    reuse tuned schedules and emitted kernels.  ``measured_store`` (a
+    ``core.measure.MeasuredCostStore``) may likewise be shared so autotune
+    measurements taken by one compile guide the next; when None, one is
+    created if ``options.autotune`` or ``options.tuning_store_path`` asks
+    for it.
     """
     opts = options or StitchOptions()
     t0 = time.perf_counter()
+    library = PerfLibrary(opts.perf_library_path)
+    store = measured_store
+    if store is None and (opts.autotune or opts.tuning_store_path):
+        from .measure import MeasuredCostStore, device_fingerprint
+
+        store = MeasuredCostStore(
+            opts.tuning_store_path,
+            device_fp=device_fingerprint(library.model.spec, opts.interpret),
+        )
     state = CompilationState(
         module=module,
         options=opts,
-        library=PerfLibrary(opts.perf_library_path),
+        library=library,
         kernel_cache=(
             kernel_cache
             if kernel_cache is not None
             else KernelCache(opts.kernel_cache_path)
         ),
+        measured_store=store,
+        measured_base_hits=store.hits if store else 0,
+        measured_base_misses=store.misses if store else 0,
     )
     default_pipeline().run(state)
     state.stats.compile_time_s = time.perf_counter() - t0
@@ -341,6 +395,8 @@ def compile_module(
         state.library.save()
     if opts.kernel_cache_path:
         state.kernel_cache.save()
+    if store is not None and opts.tuning_store_path:
+        store.save()
     return CompiledModule(state.executable, state.stats)
 
 

@@ -111,6 +111,11 @@ class FusedComputation:
     # Salts the fusion signature so stitched and split lowerings never alias
     # in the kernel cache.
     stitch_phases: Optional[Tuple[int, ...]] = None
+    # Signature of the member set the planner actually SCORED, when the
+    # constant-absorption post-pass grew the group afterwards.  Measured-cost
+    # records must be keyed by this (the scorer's lookup key on the next
+    # compile), not by the post-absorption structure; None = they coincide.
+    scored_signature: Optional[str] = None
 
     def __post_init__(self):
         ids = {m.id for m in self.members}
@@ -236,6 +241,13 @@ class FusionScorer:
     lower as multi-phase stitched kernels.  Scores are memoized by member-id
     frozenset — candidate partitions overlap heavily (the greedy group
     reappears inside every merge attempt).
+
+    When a ``measured`` store is attached (autotuning), a feasible group's
+    cost is replaced by the remembered on-device time whenever the group's
+    salted signature hits the store; the analytic number stays the cold-start
+    prior.  Feasibility itself NEVER consults measurements — an infeasible
+    group stays None no matter what the store claims — so a warm store can
+    flip plan *choices* but never plan *validity*.
     """
 
     def __init__(
@@ -247,8 +259,15 @@ class FusionScorer:
         allow_stitch: bool = True,
         stitch_replicate_limit: Optional[int] = None,
         stitch_max_blocks: int = 64,
+        measured=None,
+        options_salt: str = "",
     ):
         self.model = model or LatencyModel()
+        # MeasuredCostStore (duck-typed: .get(sig) -> obj with .cost_s, or
+        # None) — fusion.py cannot import core.measure (signature.py sits
+        # between them in the import graph).
+        self.measured = measured
+        self.options_salt = options_salt
         self.replicate_limit = replicate_limit
         self.max_blocks = max_blocks
         self.vmem_limit = vmem_limit
@@ -297,9 +316,9 @@ class FusionScorer:
         return self._memo[key]
 
     def _fused_cost(self, members: List[Instruction]) -> Optional[float]:
-        if len(members) == 1:
-            return self.standalone_cost(members[0])
         fusion = FusedComputation(list(members), name="candidate")
+        if len(members) == 1:
+            return self._maybe_measured(fusion, self.standalone_cost(members[0]))
         roots = fusion.roots
         v = self.verdict(members)
         if v.verdict == CONSISTENT:
@@ -307,14 +326,33 @@ class FusionScorer:
                 plan_memory(members, roots, v.solution, self.vmem_limit)
             except MemoryInfeasible:
                 return None
-            return self.model.fusion_time(members, roots, v.solution)
+            return self._maybe_measured(
+                fusion, self.model.fusion_time(members, roots, v.solution)
+            )
         if v.verdict == STITCHABLE:
             try:
                 plan_stitched_memory(v.stitched, self.vmem_limit)
             except MemoryInfeasible:
                 return None
-            return self.model.stitched_fusion_time(v.stitched)
+            # Sign the candidate with the phase structure it would lower
+            # with, so its store key matches the committed stitched kernel's.
+            fusion.stitch_phases = v.stitched.phase_sizes
+            return self._maybe_measured(
+                fusion, self.model.stitched_fusion_time(v.stitched)
+            )
         return None
+
+    def _maybe_measured(
+        self, fusion: FusedComputation, analytic: float
+    ) -> float:
+        """Measured seconds when the store knows this lowering, else the
+        analytic prior.  Called only on FEASIBLE groups."""
+        if self.measured is None:
+            return analytic
+        from .signature import fusion_signature  # local: signature imports us
+
+        rec = self.measured.get(self.options_salt + fusion_signature(fusion))
+        return rec.cost_s if rec is not None else analytic
 
     def partition_cost(
         self, groups: List[List[Instruction]]
@@ -831,12 +869,26 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
                 members.add(o)
                 assigned.add(o.id)
                 stack.extend(o.operands)
+        scored_sig = None
+        if (
+            len(members) > len(f.members)
+            and scorer is not None
+            and scorer.measured is not None
+        ):
+            # Absorption changed the structure AFTER scoring: remember the
+            # signature the scorer looked up, so the autotuner can file the
+            # measurement under the key the next compile's scorer will ask
+            # for.
+            from .signature import fusion_signature  # local: import cycle
+
+            scored_sig = fusion_signature(f)
         absorbed_fusions.append(
             FusedComputation(
                 _topo_sorted(members, module),
                 name=f.name,
                 modeled_cost_s=f.modeled_cost_s,
                 stitch_phases=f.stitch_phases,
+                scored_signature=scored_sig,
             )
         )
     fusions = absorbed_fusions

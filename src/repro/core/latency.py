@@ -33,7 +33,8 @@ What it approximates:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import hashlib
+from dataclasses import dataclass, fields
 from typing import Sequence, Tuple
 
 import numpy as np
@@ -70,6 +71,16 @@ class DeviceSpec:
     phase_loop_overhead_s: float = 5.0e-7    # per stitched-phase transition
     sublane: int = 8
     lane: int = 128
+
+    def fingerprint(self) -> str:
+        """Content hash of the hardware constants.  A measured kernel time is
+        only meaningful relative to the device it was taken on, so the
+        measured-cost tuning store (``core/measure.py``) keys every record by
+        this fingerprint (combined with the runtime backend): a store carried
+        to a different device spec degrades to all-misses — the analytic
+        model — instead of replaying another chip's timings."""
+        feats = tuple((f.name, getattr(self, f.name)) for f in fields(self))
+        return hashlib.sha256(repr(feats).encode()).hexdigest()[:16]
 
 
 TPU_V5E = DeviceSpec()

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import threading
 from typing import Dict, Optional
 
@@ -69,13 +70,38 @@ class JsonStore:
             return self._store.pop(key, default)
 
     def save(self) -> None:
+        """Atomically persist the store.
+
+        The payload is fully written (and fsync'd) to a *uniquely named*
+        temp file in the target directory, then ``os.replace``d over the
+        destination.  A crash mid-write — or a concurrent saver from another
+        process — can therefore never leave a truncated or interleaved JSON
+        file at ``self.path``: readers see either the old complete store or
+        the new complete store.  (A fixed ``path + ".tmp"`` scratch name is
+        NOT safe: two processes would interleave writes into the same temp
+        file and then replace the real store with the torn result.)
+        """
         if not self.path:
             return
-        tmp = self.path + ".tmp"
-        with self._lock:
-            with open(tmp, "w") as f:
-                json.dump(self._store, f)
-        os.replace(tmp, self.path)
+        directory = os.path.dirname(os.path.abspath(self.path)) or "."
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(self.path) + ".", suffix=".tmp",
+            dir=directory,
+        )
+        try:
+            with self._lock:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._store, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            # the destination is untouched; drop our scratch file
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def __contains__(self, key: str) -> bool:
         with self._lock:

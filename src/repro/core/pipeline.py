@@ -33,6 +33,7 @@ from .fusion import (
     deep_fuse,
 )
 from .ir import Instruction, Module
+from .measure import measure_kernel
 from .memory import MemoryInfeasible, plan_memory, plan_stitched_memory
 from .perf_library import PerfLibrary
 from .schedule import (
@@ -56,6 +57,11 @@ class PlannedFusion:
     is_representative: bool          # this instance built the entry
     kernel: Optional[StitchedKernel] = None
     tuned_from_disk: bool = False
+    # Measured-store key for this fusion (options salt + the signature the
+    # planner SCORED — see FusedComputation.scored_signature).  Recorded by
+    # SchedulePass so AutotunePass files measurements under the exact key
+    # the next compile's scorer will look up.
+    measure_sig: Optional[str] = None
 
     @property
     def cache_hit(self) -> bool:
@@ -74,6 +80,14 @@ class CompilationState:
     planned: List[PlannedFusion] = field(default_factory=list)
     demoted: List[Instruction] = field(default_factory=list)
     pass_times: Dict[str, float] = field(default_factory=dict)
+    # Autotuning: the MeasuredCostStore for this compile (None = analytic
+    # only).  The hit/miss counters live on the store and accumulate across
+    # compiles when it is shared, so FinalizePass reports deltas against the
+    # snapshot taken when the state was built.
+    measured_store: Optional[object] = None
+    measured_base_hits: int = 0
+    measured_base_misses: int = 0
+    measurements_taken: int = 0
     # filled by FinalizePass
     executable: Optional[object] = None
     stats: Optional[object] = None
@@ -126,6 +140,8 @@ class FusionPass(Pass):
                 allow_stitch=opts.enable_stitching,
                 stitch_replicate_limit=srl,
                 stitch_max_blocks=opts.stitch_max_blocks,
+                measured=state.measured_store,
+                options_salt=_measure_salt(opts),
             )
 
         if scorer is not None:
@@ -192,7 +208,24 @@ def _options_fingerprint(opts) -> str:
     structure must not resurrect under a differently-partitioned compile.
     The stitching options are part of it because they decide *phases*: a
     stitched lowering must never serve a stitching-disabled compile (the
-    phase structure itself additionally salts ``fusion_signature``)."""
+    phase structure itself additionally salts ``fusion_signature``).
+    The autotune knobs are part of it because they decide which *costs* the
+    planner saw: an entry partitioned under measured costs must not serve an
+    analytic-only compile (or one reading a different tuning store)."""
+    return (
+        _measure_salt(opts)
+        + f"at{int(getattr(opts, 'autotune', False))}"
+        f":mr{getattr(opts, 'measure_repeats', 5)}"
+        f":ts{getattr(opts, 'tuning_store_path', None) or ''}:"
+    )
+
+
+def _measure_salt(opts) -> str:
+    """Salt for MeasuredCostStore keys: everything that changes what a
+    kernel IS (interpret, memory budgets, blocks, planner, stitching) but
+    NOT the autotune-control knobs — a measurement describes the lowering,
+    not how eagerly we measure, so a store warmed under ``autotune=True``
+    must still serve a later read-only ``tuning_store_path`` compile."""
     srl = _stitch_replicate_limit(opts)
     return (
         f"i{int(opts.interpret)}:v{opts.vmem_limit}:r{opts.replicate_limit}"
@@ -216,12 +249,20 @@ class SchedulePass(Pass):
         opts = state.options
         cache = state.kernel_cache
         salt = _options_fingerprint(opts)
+        msalt = _measure_salt(opts)
         for fusion in state.fusion_plan.fusions:
-            sig = salt + fusion_signature(fusion)
+            raw = fusion_signature(fusion)
+            sig = salt + raw
+            # Measured records are keyed by the signature the PLANNER scored
+            # (pre-absorption when the two differ) — the key next compile's
+            # scorer will ask the store for.
+            msig = msalt + (fusion.scored_signature or raw)
             if opts.dedup_kernels:
                 entry = cache.get(sig)
                 if entry is not None:
-                    state.planned.append(PlannedFusion(fusion, entry, False))
+                    state.planned.append(
+                        PlannedFusion(fusion, entry, False, measure_sig=msig)
+                    )
                     continue
             tuned, from_disk = self._tune(state, fusion, sig)
             if tuned is None:
@@ -235,9 +276,12 @@ class SchedulePass(Pass):
                 if entry is None:
                     state.demoted.extend(fusion.members)
                     continue
+                self._apply_measured(state, entry, msig)
                 if opts.dedup_kernels:
                     cache.put(entry)
-                state.planned.append(PlannedFusion(fusion, entry, True))
+                state.planned.append(
+                    PlannedFusion(fusion, entry, True, measure_sig=msig)
+                )
                 continue
             roots = fusion.roots
             entry = CacheEntry(
@@ -246,12 +290,31 @@ class SchedulePass(Pass):
                 memory=None,
                 cost_s=tuned.cost_s,
                 root_scheds=[tuned.solution.root_scheds[r.id] for r in roots],
+                model_cost_s=tuned.cost_s,
             )
+            self._apply_measured(state, entry, msig)
             if opts.dedup_kernels:
                 cache.put(entry)
             state.planned.append(
-                PlannedFusion(fusion, entry, True, tuned_from_disk=from_disk)
+                PlannedFusion(
+                    fusion, entry, True,
+                    tuned_from_disk=from_disk, measure_sig=msig,
+                )
             )
+
+    @staticmethod
+    def _apply_measured(state, entry: CacheEntry, msig: str) -> None:
+        """On a measured-store hit, the entry's actionable cost becomes the
+        on-device time (the analytic number stays in ``model_cost_s`` for
+        error reporting); on a miss, nothing changes and AutotunePass will
+        measure the emitted kernel."""
+        store = state.measured_store
+        if store is None:
+            return
+        rec = store.get(msig)
+        if rec is not None:
+            entry.measured_cost_s = rec.cost_s
+            entry.cost_s = rec.cost_s
 
     def _tune(self, state, fusion, sig):
         opts = state.options
@@ -314,12 +377,14 @@ class SchedulePass(Pass):
             )
             if tuned is not None:
                 st.phases[k] = PhaseSolution(p.members, p.roots, tuned.solution)
+        cost = state.library.model.stitched_fusion_time(st)
         return CacheEntry(
             signature=sig,
             solution=None,
             memory=None,
-            cost_s=state.library.model.stitched_fusion_time(st),
+            cost_s=cost,
             stitched=st,
+            model_cost_s=cost,
         )
 
 
@@ -392,6 +457,11 @@ class MemoryPass(Pass):
             p.fusion = fusion
             entry.solution = tuned.solution
             entry.cost_s = tuned.cost_s
+            if dropped:
+                # the structure changed: the pre-shrink measurement (and the
+                # pre-shrink analytic estimate) no longer describe it
+                entry.model_cost_s = tuned.cost_s
+                entry.measured_cost_s = None
             entry.memory = mem
             entry.root_scheds = [
                 tuned.solution.root_scheds[r.id] for r in roots
@@ -445,6 +515,44 @@ class CodegenPass(Pass):
                 p.kernel = entry.kernel.bind(p.fusion)
 
 
+class AutotunePass(Pass):
+    """Measure each unique emitted kernel once and remember the result.
+
+    Runs after CodegenPass (it needs the compiled callables) and only when
+    ``options.autotune`` is set: every representative whose measured-store
+    lookup missed in SchedulePass gets timed on device (warmup +
+    median-of-``measure_repeats`` with ``block_until_ready``) and filed
+    under its measure key, so the NEXT compile's scorer and SchedulePass see
+    real costs.  Within this compile the plan is already committed — the
+    measurement-guided loop closes across compiles, never by re-planning
+    mid-pipeline.  Misses here are the store's cold-start cost; hits make
+    the pass free.
+    """
+
+    name = "autotune"
+
+    def run(self, state: CompilationState) -> None:
+        store = state.measured_store
+        if store is None or not getattr(state.options, "autotune", False):
+            return
+        repeats = getattr(state.options, "measure_repeats", 5)
+        for p in state.planned:
+            if not p.is_representative or p.kernel is None:
+                continue
+            entry = p.entry
+            if entry.measured_cost_s is not None:
+                continue  # store hit (or already measured this compile)
+            t = measure_kernel(p.kernel, repeats=repeats)
+            model_s = (
+                entry.model_cost_s
+                if entry.model_cost_s is not None
+                else entry.cost_s
+            )
+            store.put(p.measure_sig, t, model_s=model_s, repeats=repeats)
+            entry.measured_cost_s = t
+            state.measurements_taken += 1
+
+
 class FinalizePass(Pass):
     """Assemble the final FusionPlan, the planned executable, and stats."""
 
@@ -459,5 +567,12 @@ class FinalizePass(Pass):
 
 def default_pipeline() -> PassPipeline:
     return PassPipeline(
-        [FusionPass(), SchedulePass(), MemoryPass(), CodegenPass(), FinalizePass()]
+        [
+            FusionPass(),
+            SchedulePass(),
+            MemoryPass(),
+            CodegenPass(),
+            AutotunePass(),
+            FinalizePass(),
+        ]
     )

@@ -111,6 +111,11 @@ class CacheEntry:
     root_scheds: List[Sched] = field(default_factory=list)  # in root order
     kept_members: Optional[int] = None   # after memory-feedback shrink
     stitched: Optional[object] = None    # schedule.StitchedSolution
+    # Autotuning bookkeeping: cost_s above is whatever the planner will act
+    # on (measured when the store hit, analytic otherwise); these two keep
+    # the provenance apart so CompileStats can report model error.
+    model_cost_s: Optional[float] = None     # analytic LatencyModel seconds
+    measured_cost_s: Optional[float] = None  # on-device seconds, if known
 
     @property
     def blocks(self) -> int:

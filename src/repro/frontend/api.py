@@ -25,6 +25,7 @@ hand-built StitchIR.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
@@ -95,6 +96,11 @@ class StitchedFunction:
         self.name = name or getattr(fn, "__name__", "stitched")
         self._plans: Dict[Any, _PlanEntry] = {}
         self._kernel_cache = KernelCache(self.options.kernel_cache_path)
+        # Shared across this function's per-shape compiles (like the kernel
+        # cache): a kernel measured for one input shape guides the planner
+        # on the next shape's compile.  Created lazily — most functions
+        # never turn autotuning on.
+        self._measured_store = None
         self._fallback_jit: Optional[Callable] = None
         self._last: Optional[_PlanEntry] = None
         self.num_compiles = 0
@@ -136,8 +142,20 @@ class StitchedFunction:
             entry = _PlanEntry(None, None, out_tree)
             self._plans[key] = entry
             return entry
+        if self._measured_store is None and (
+            self.options.autotune or self.options.tuning_store_path
+        ):
+            from ..core.measure import MeasuredCostStore, device_fingerprint
+
+            self._measured_store = MeasuredCostStore(
+                self.options.tuning_store_path,
+                device_fp=device_fingerprint(
+                    interpret=self.options.interpret
+                ),
+            )
         compiled = compile_module(
-            lowered.module, self.options, kernel_cache=self._kernel_cache
+            lowered.module, self.options, kernel_cache=self._kernel_cache,
+            measured_store=self._measured_store,
         )
         self.num_compiles += 1
         entry = _PlanEntry(lowered, compiled, out_tree)
@@ -233,6 +251,7 @@ def stitch(
     options: Optional[StitchOptions] = None,
     on_unsupported: str = "error",
     name: Optional[str] = None,
+    autotune: Optional[bool] = None,
 ) -> StitchedFunction:
     """Capture a JAX function into StitchIR and compile it per input shape.
 
@@ -249,10 +268,20 @@ def stitch(
     ``UnsupportedPrimitiveError`` when the function uses a primitive outside
     the supported set; ``"fallback"`` executes the whole function through
     plain ``jax.jit`` instead, so partial coverage never blocks a caller.
+
+    ``autotune``: convenience override of ``options.autotune`` —
+    ``stitch(fn, autotune=True)`` times each unique kernel once on device
+    and re-plans later shapes against measured costs (``core/measure.py``).
     """
     if fn is None:
         return functools.partial(
-            stitch, options=options, on_unsupported=on_unsupported, name=name
+            stitch, options=options, on_unsupported=on_unsupported,
+            name=name, autotune=autotune,
+        )
+    if autotune is not None:
+        options = dataclasses.replace(
+            options if options is not None else StitchOptions(),
+            autotune=autotune,
         )
     return StitchedFunction(
         fn, options=options, on_unsupported=on_unsupported, name=name
