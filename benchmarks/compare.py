@@ -11,9 +11,14 @@ Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
     emitting more kernels than its hand-built parity plan
     (``frontend/*/kernels`` ``stitched=N``), a chunked-prefill
     decode-launch count creeping back toward the per-token O(S) loop
-    (``serve_runtime/prefill_launches`` ``chunked=N``), or the traced
+    (``serve_runtime/prefill_launches`` ``chunked=N``), the traced
     ExecutionPlan replay dispatching more segments per call
-    (``serve_runtime/*`` ``traced=N``);
+    (``serve_runtime/*`` ``traced=N``), or the paged serving engine losing
+    ground on the traffic gate (``serve_traffic*``: max in-flight or
+    completed count below baseline, tokens/s down or p99 TTFT up past
+    ``--serve-tolerance``, the paged-vs-slot concurrency ratio under 4x,
+    or an incomplete trace replay — the last two checked within the fresh
+    row itself, so a blind baseline regen cannot bake them in);
   * **warnings** (exit 0) when modeled latency (``planner/*/predicted_us``)
     drifts past the tolerance (default ±15%), or when the analytic model's
     measured error (``autotune/*/model_error_pct``) drifts past
@@ -53,6 +58,12 @@ def _derived_float(row: dict) -> Optional[float]:
         return None
 
 
+def _derived_num(row: dict, key: str) -> Optional[float]:
+    """``key=<number>`` with a float value (``ratio=4.2``, ``p99=13.07``)."""
+    m = re.search(rf"\b{key}=(-?\d+(?:\.\d+)?)", str(row.get("derived", "")))
+    return float(m.group(1)) if m else None
+
+
 def _graph_of(name: str) -> str:
     """The graph segment of a row name (``planner/NMT/kernels`` -> NMT)."""
     parts = name.split("/")
@@ -76,6 +87,7 @@ def compare(
     fresh: Dict[str, dict],
     latency_tolerance: float = 0.15,
     error_tolerance_pct: float = 25.0,
+    serve_tolerance: float = 0.5,
 ) -> Tuple[List[str], List[str], List[str]]:
     """Returns (hard_failures, warnings, notes)."""
     failures: List[str] = []
@@ -148,6 +160,54 @@ def compare(
                     base, cur,
                 ))
 
+        elif name.startswith("serve_traffic") and name.endswith("/inflight"):
+            b = _derived_int(base, "paged")
+            f = _derived_int(cur, "paged")
+            if b is not None and f is not None and f < b:
+                failures.append(_fail_msg(
+                    name, "paged",
+                    f"paged max in-flight regressed {b} -> {f}",
+                    base, cur,
+                ))
+
+        elif name.startswith("serve_traffic") and name.endswith("/completed"):
+            b = _derived_int(base, "paged")
+            f = _derived_int(cur, "paged")
+            if b is not None and f is not None and f < b:
+                failures.append(_fail_msg(
+                    name, "paged",
+                    f"paged completed-request count regressed {b} -> {f}",
+                    base, cur,
+                ))
+
+        elif name.startswith("serve_traffic") and name.endswith("/tokens_per_s"):
+            b = _derived_num(base, "paged")
+            f = _derived_num(cur, "paged")
+            if (
+                b is not None and f is not None
+                and f < b * (1 - serve_tolerance)
+            ):
+                failures.append(_fail_msg(
+                    name, "paged",
+                    f"paged throughput regressed {b:.0f} -> {f:.0f} tok/s "
+                    f"(> {serve_tolerance:.0%} below baseline)",
+                    base, cur,
+                ))
+
+        elif name.startswith("serve_traffic") and name.endswith("/ttft_ms"):
+            b = _derived_num(base, "p99")
+            f = _derived_num(cur, "p99")
+            if (
+                b is not None and f is not None
+                and f > b * (1 + serve_tolerance)
+            ):
+                failures.append(_fail_msg(
+                    name, "p99",
+                    f"paged p99 TTFT regressed {b:.2f} -> {f:.2f} ms "
+                    f"(> {serve_tolerance:.0%} above baseline)",
+                    base, cur,
+                ))
+
         elif name.startswith("planner/") and name.endswith("/predicted_us"):
             b, f = base.get("us_per_call"), cur.get("us_per_call")
             if b and f and abs(f - b) > latency_tolerance * abs(b):
@@ -182,6 +242,31 @@ def compare(
                     cur, cur,
                 ))
 
+    # serve-traffic invariants are also checked WITHIN each fresh row,
+    # independent of the baseline: the >= 4x concurrency claim and full
+    # trace completion are acceptance criteria, not relative drift — a
+    # blind baseline regen can never bake in a regression of either
+    for name, cur in sorted(fresh.items()):
+        if name.startswith("serve_traffic/") and name.endswith("/inflight"):
+            ratio = _derived_num(cur, "ratio")
+            if ratio is not None and ratio < 4.0:
+                failures.append(_fail_msg(
+                    name, "ratio",
+                    f"paged-vs-slot concurrency ratio {ratio:.1f} below the "
+                    f"4x gate (same KV budget)",
+                    cur, cur,
+                ))
+        if name.startswith("serve_traffic") and name.endswith("/completed"):
+            done = _derived_int(cur, "paged")
+            total = _derived_int(cur, "total")
+            if done is not None and total is not None and done < total:
+                failures.append(_fail_msg(
+                    name, "paged/total",
+                    f"paged engine finished only {done} of {total} trace "
+                    f"requests (liveness violation or truncated replay)",
+                    cur, cur,
+                ))
+
     for name in sorted(set(fresh) - set(baseline)):
         notes.append(f"{name}: new row (not in baseline)")
     return failures, warnings, notes
@@ -204,12 +289,21 @@ def main(argv=None) -> int:
         help="model-vs-measured error drift (percentage points, "
         "autotune/*/model_error_pct) that triggers a warning",
     )
+    ap.add_argument(
+        "--serve-tolerance",
+        type=float,
+        default=0.5,
+        help="relative wall-clock drift on serve_traffic rows (tokens/s "
+        "down or p99 TTFT up) that triggers a hard failure — generous by "
+        "default because shared CI runners are noisy",
+    )
     args = ap.parse_args(argv)
     failures, warnings, notes = compare(
         load_rows(args.baseline),
         load_rows(args.fresh),
         args.latency_tolerance,
         args.error_tolerance_pct,
+        args.serve_tolerance,
     )
     for n in notes:
         print(f"NOTE  {n}")

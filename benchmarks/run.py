@@ -411,6 +411,138 @@ def bench_serve_runtime():
     return rows
 
 
+def _serve_traffic_rows(prefix, *, width, slot_pool, max_len, block_size,
+                        num_blocks, prefill_chunk, trace_cfgs, max_ticks):
+    """Paged continuous batching vs the contiguous slot ring under the SAME
+    offered load and the SAME total KV budget (``num_blocks * block_size ==
+    slot_pool * max_len`` tokens).  Each arrival process lands one row
+    group: concurrency (paged in-flight vs the slot ceiling), throughput,
+    TTFT/latency percentiles, and KV-block pressure counters."""
+    from repro.configs import get_config, reduced_config
+    from repro.models import init_params
+    from repro.serve import (
+        PagedServeEngine,
+        Request,
+        ServeEngine,
+        generate_trace,
+        run_trace,
+    )
+
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, seed=0)
+
+    def paged():
+        return PagedServeEngine(
+            cfg, params, decode_width=width, max_len=max_len,
+            block_size=block_size, num_blocks=num_blocks,
+            prefill_chunk=prefill_chunk,
+        )
+
+    def slot():
+        return ServeEngine(
+            cfg, params, pool_size=slot_pool, max_len=max_len,
+            prefill_chunk=prefill_chunk,
+        )
+
+    # warm the shared jitted decode fns so one-time trace+compile stays
+    # out of the measured replay windows
+    warm_prompt = np.arange(1, 5, dtype=np.int32)
+    for eng in (paged(), slot()):
+        eng.admit(Request(rid=-1, prompt=warm_prompt, max_new_tokens=2))
+        eng.run_until_done(max_ticks=200)
+
+    rows = []
+    for tc in trace_cfgs:
+        trace = generate_trace(tc)
+        pe = paged()
+        pr = run_trace(pe, trace, max_ticks=max_ticks)
+        se = slot()
+        sr = run_trace(se, trace, max_ticks=max_ticks)
+        kind = tc.arrival
+        ratio = pr.max_inflight / max(1, sr.max_inflight)
+        rows.append(
+            (f"{prefix}/{kind}/inflight", 0.0,
+             f"paged={pr.max_inflight} slot={sr.max_inflight} "
+             f"ratio={ratio:.1f} mean={pr.mean_inflight:.1f} "
+             f"width={width} slot_pool={slot_pool}")
+        )
+        rows.append(
+            (f"{prefix}/{kind}/tokens_per_s", pr.duration_s * 1e6,
+             f"paged={pr.tokens_per_s:.0f} slot={sr.tokens_per_s:.0f}")
+        )
+        rows.append(
+            (f"{prefix}/{kind}/ttft_ms", pr.ttft_p99_ms * 1e3,
+             f"p50={pr.ttft_p50_ms:.2f} p99={pr.ttft_p99_ms:.2f} "
+             f"slot_p50={sr.ttft_p50_ms:.2f} slot_p99={sr.ttft_p99_ms:.2f}")
+        )
+        rows.append(
+            (f"{prefix}/{kind}/latency_ms", pr.latency_p99_ms * 1e3,
+             f"p50={pr.latency_p50_ms:.2f} p99={pr.latency_p99_ms:.2f} "
+             f"slot_p50={sr.latency_p50_ms:.2f} "
+             f"slot_p99={sr.latency_p99_ms:.2f}")
+        )
+        kv = pe.stats().get("kv_blocks", {})
+        rows.append(
+            (f"{prefix}/{kind}/kv_blocks", 0.0,
+             f"peak={kv.get('peak_in_use', 0)} total={num_blocks} "
+             f"peak_util={kv.get('peak_utilization', 0.0):.2f} "
+             f"mean_util={kv.get('mean_utilization', 0.0):.2f} "
+             f"preempt={pr.preemptions} "
+             f"alloc_failures={pr.kv_alloc_failures}")
+        )
+        rows.append(
+            (f"{prefix}/{kind}/completed", 0.0,
+             f"paged={pr.completed} slot={sr.completed} total={pr.total}")
+        )
+    return rows
+
+
+def bench_serve_traffic():
+    """Traffic-trace gate: the paged engine must sustain >= 4x the slot
+    engine's concurrency at equal-or-better throughput under the same KV
+    budget (compare.py hard-fails on the ratio= field of these rows)."""
+    from repro.serve import TraceConfig
+
+    return _serve_traffic_rows(
+        "serve_traffic",
+        width=32, slot_pool=4, max_len=64, block_size=4, num_blocks=64,
+        prefill_chunk=8, max_ticks=100_000,
+        trace_cfgs=[
+            TraceConfig(
+                num_requests=192, arrival="poisson",
+                mean_interarrival_ticks=0.25, prompt_len_lo=3,
+                prompt_len_hi=10, max_new_lo=4, max_new_hi=8,
+                vocab_size=256, seed=0,
+            ),
+            TraceConfig(
+                num_requests=192, arrival="bursty", burst_size=32,
+                burst_gap_ticks=24.0, prompt_len_lo=3, prompt_len_hi=10,
+                max_new_lo=4, max_new_hi=8, vocab_size=256, seed=1,
+            ),
+        ],
+    )
+
+
+def bench_serve_traffic_smoke():
+    """Tiny bursty trace for CI's fast lane: exercises paged admission,
+    block paging and the scheduler end-to-end in seconds; gated only on
+    completion (wall-clock rows too noisy at this size to gate)."""
+    from repro.serve import TraceConfig
+
+    return _serve_traffic_rows(
+        "serve_traffic_smoke",
+        width=8, slot_pool=2, max_len=32, block_size=4, num_blocks=16,
+        prefill_chunk=4, max_ticks=20_000,
+        trace_cfgs=[
+            TraceConfig(
+                num_requests=24, arrival="bursty", burst_size=8,
+                burst_gap_ticks=12.0, prompt_len_lo=3, prompt_len_hi=8,
+                max_new_lo=3, max_new_hi=6, vocab_size=256, seed=2,
+            ),
+        ],
+    )
+
+
 # --autotune-graphs: None = every bench graph (full baseline runs); CI's
 # fast lane narrows this to two graphs for an interpret-mode smoke signal.
 AUTOTUNE_GRAPHS = None
@@ -466,6 +598,8 @@ ALL_BENCHES = [
     bench_stitched_kernels,
     bench_frontend,
     bench_serve_runtime,
+    bench_serve_traffic,
+    bench_serve_traffic_smoke,
     bench_autotune,
 ]
 

@@ -1,9 +1,12 @@
-"""End-to-end serving driver: batched requests through the ServeEngine.
+"""End-to-end serving driver: continuous batching through the paged engine.
 
 The paper's NMT use case — latency-critical online inference with small
 batches — mapped onto our serving substrate: a small decoder LM with the
-attention pattern the stitched kernels accelerate, continuous slot-based
-batching, KV cache, greedy decode.
+attention pattern the stitched kernels accelerate, continuous batching
+over paged KV blocks, greedy decode.  Twenty requests share a KV pool
+sized for far fewer worst-case contexts; the block allocator and the
+prefill/decode scheduler keep them all moving at once, where the old
+slot engine would cap concurrency at its pool size.
 
     PYTHONPATH=src python examples/serve_nmt.py
 """
@@ -17,7 +20,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 from repro.configs import get_config, reduced_config  # noqa: E402
 from repro.models import init_params  # noqa: E402
-from repro.serve import Request, ServeEngine  # noqa: E402
+from repro.serve import PagedServeEngine, Request  # noqa: E402
 
 
 def main():
@@ -27,26 +30,31 @@ def main():
         num_heads=4, head_dim=32, d_ff=256, vocab_size=512,
     )
     params = init_params(cfg, seed=0)
-    engine = ServeEngine(cfg, params, pool_size=4, max_len=128,
-                         prefill_chunk=8)
+    # 64 blocks x 8 tokens = 512 KV tokens total — the old slot engine's
+    # budget for FOUR max_len=128 slots now serves ~20 short requests
+    engine = PagedServeEngine(
+        cfg, params, decode_width=16, max_len=128, block_size=8,
+        num_blocks=64, prefill_chunk=8,
+    )
 
     rng = np.random.RandomState(0)
     requests = [
         Request(rid=i, prompt=rng.randint(1, 500, size=rng.randint(4, 12)),
                 max_new_tokens=12)
-        for i in range(10)
+        for i in range(20)
     ]
 
     t0 = time.perf_counter()
     done = []
     ticks = 0
-    # admit everything up front: overflow parks on the engine's FIFO wait
-    # queue and is drained into freed slots at the start of each tick
+    # admit everything up front: placements claim a decode row + KV blocks
+    # immediately (prefill itself runs interleaved over the next ticks);
+    # overflow parks on the FIFO wait queue and drains as blocks free up
     for r in requests:
         placed = engine.admit(r)
         print(f"[admit] request {r.rid} (prompt {len(r.prompt)} toks) "
-              f"{'-> slot' if placed else '-> queued'}")
-    while engine.wait_queue or any(r is not None for r in engine.slot_req):
+              f"{'-> row' if placed else '-> queued'}")
+    while engine.busy and ticks < 2000:
         engine.tick()
         ticks += 1
         for r in requests:
@@ -56,19 +64,24 @@ def main():
                       f"(wait {1e3 * (r.queue_wait_s or 0):.0f}ms, "
                       f"ttft {1e3 * (r.ttft_s or 0):.0f}ms, "
                       f"{r.tokens_per_s or 0:.1f} tok/s)")
-        if ticks > 500:
-            break
     dt = time.perf_counter() - t0
     total_toks = sum(len(r.out_tokens) for r in requests)
     st = engine.stats()
+    kv = st["kv_blocks"]
     print(f"\nserved {len(done)}/{len(requests)} requests, "
           f"{total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s on 1 CPU core, pool=4)")
+          f"({total_toks / dt:.1f} tok/s on 1 CPU core, "
+          f"width=16, {kv['num_blocks']}x{kv['block_size']}-token blocks)")
     print(f"prefill launches: {st['prefill_launches']} for "
-          f"{st['prefill_tokens']} prompt tokens "
-          f"(per-token prefill would be {st['prefill_tokens']}); "
-          f"decode launches: {st['decode_launches']}")
+          f"{st['prefill_tokens']} prompt tokens; "
+          f"decode launches: {st['decode_launches']}; "
+          f"max in-flight: {st['max_inflight']} "
+          f"(slot engine with this KV budget caps at 4); "
+          f"kv peak {kv['peak_in_use']}/{kv['num_blocks']} blocks, "
+          f"preemptions {st['preemptions']}")
     assert len(done) == len(requests)
+    assert st["max_inflight"] > 4      # the continuous-batching win
+    assert kv["in_use"] == 0           # every block returned
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Serving launcher: batched decode on a selected architecture.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 8 --max-new 16 [--reduced] [--prefill-chunk 16]
+        --requests 8 --max-new 16 [--reduced] [--engine paged|slot] \
+        [--block-size 16] [--num-blocks N] [--ttft-slo-ms 50]
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import numpy as np
 
 from ..configs import get_config, reduced_config
 from ..models import count_params, init_params
-from ..serve import Request, ServeEngine
+from ..serve import PagedServeEngine, Request, ServeEngine, SLOConfig
 
 
 def main():
@@ -21,10 +22,26 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--pool", type=int, default=4)
+    ap.add_argument("--engine", choices=("paged", "slot"), default="paged",
+                    help="paged = continuous batching over KV blocks "
+                    "(default); slot = contiguous per-slot rings")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="slot engine: batch slots; paged engine: decode "
+                    "width (rows per batched launch)")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens per prefill launch (1 = per-token)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged engine: total KV blocks (default: "
+                    "pool * ceil(ring/block_size), i.e. no memory pressure)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="paged engine: prioritize prefill when a request's "
+                    "projected TTFT would overrun this")
+    ap.add_argument("--decode-slo-ms", type=float, default=None,
+                    help="paged engine: force a decode launch when the gap "
+                    "since the last one exceeds this")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -32,12 +49,32 @@ def main():
     if args.reduced or jax.default_backend() == "cpu":
         cfg = reduced_config(cfg)
     params = init_params(cfg, seed=0)
-    print(f"[serve] {cfg.name}: {count_params(params):,} params, "
-          f"pool={args.pool}, max_len={args.max_len}, "
-          f"prefill_chunk={args.prefill_chunk}")
-    engine = ServeEngine(cfg, params, pool_size=args.pool,
-                         max_len=args.max_len,
-                         prefill_chunk=args.prefill_chunk)
+    if args.engine == "paged":
+        slo = None
+        if args.ttft_slo_ms is not None or args.decode_slo_ms is not None:
+            slo = SLOConfig(
+                ttft_slo_s=(args.ttft_slo_ms / 1e3
+                            if args.ttft_slo_ms is not None else None),
+                decode_slo_s=(args.decode_slo_ms / 1e3
+                              if args.decode_slo_ms is not None else None),
+            )
+        engine = PagedServeEngine(
+            cfg, params, decode_width=args.pool, max_len=args.max_len,
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            prefill_chunk=args.prefill_chunk, slo=slo,
+        )
+        kv = (f"blocks={engine.num_blocks}x{engine.block_size}"
+              if engine.allocator is not None else "no-kv(ssm)")
+        print(f"[serve] {cfg.name}: {count_params(params):,} params, "
+              f"paged width={args.pool}, max_len={args.max_len}, {kv}, "
+              f"prefill_chunk={args.prefill_chunk}")
+    else:
+        engine = ServeEngine(cfg, params, pool_size=args.pool,
+                             max_len=args.max_len,
+                             prefill_chunk=args.prefill_chunk)
+        print(f"[serve] {cfg.name}: {count_params(params):,} params, "
+              f"slot pool={args.pool}, max_len={args.max_len}, "
+              f"prefill_chunk={args.prefill_chunk}")
     rng = np.random.RandomState(0)
     reqs = [
         Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, size=rng.randint(4, 12)),
@@ -45,13 +82,10 @@ def main():
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    ticks = 0
-    # admit() parks overflow on the engine's wait queue; ticks drain it
+    # admit() parks overflow on the engine's FIFO wait queue; ticks drain it
     for r in reqs:
         engine.admit(r)
-    while (engine.wait_queue or engine.active_slots) and ticks < 2000:
-        engine.tick()
-        ticks += 1
+    remaining = engine.run_until_done(max_ticks=20_000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens or []) for r in reqs)
     for r in reqs:
@@ -62,12 +96,20 @@ def main():
               f"latency={1e3 * (r.latency_s or 0):7.1f}ms "
               f"tok/s={r.tokens_per_s or 0:6.1f}")
     st = engine.stats()
-    print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} done, "
+    print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} done "
+          f"({remaining} unfinished), "
           f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     print(f"[serve] launches: prefill={st['prefill_launches']} "
           f"(per-token would be {st['prefill_tokens']}), "
           f"decode={st['decode_launches']}; "
           f"decode_cache={st['decode_cache']}")
+    if "kv_blocks" in st:
+        kv = st["kv_blocks"]
+        print(f"[serve] kv blocks: peak={kv['peak_in_use']}/{kv['num_blocks']} "
+              f"(util {kv['peak_utilization']:.2f}), "
+              f"alloc={kv['allocated_total']} freed={kv['freed_total']} "
+              f"preemptions={st['preemptions']} "
+              f"max_inflight={st['max_inflight']}")
 
 
 if __name__ == "__main__":

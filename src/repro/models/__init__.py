@@ -6,6 +6,7 @@ from .transformer import (
     decode_step,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     param_specs,
     prefill_cross_attention,

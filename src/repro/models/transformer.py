@@ -302,13 +302,53 @@ def init_cache(cfg, batch: int, max_len: int) -> Params:
     return cache
 
 
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     decode_width: int) -> Params:
+    """Paged KV cache: a single (L, num_blocks + 1, block_size, Hkv, hd)
+    block pool SHARED by every request (physical block ``num_blocks`` is the
+    parking block for masked writes), instead of per-slot contiguous rings.
+    Rows own logical->physical block tables managed by the serving layer's
+    ``BlockAllocator``; SSM/conv state stays per-row O(1) (it does not
+    page), sized by ``decode_width`` — the decode batch width, now
+    independent of KV memory reservation."""
+    Lh, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.jax_dtype
+    if cfg.family == "audio":
+        raise ValueError(
+            "paged KV decode does not support the audio family (the "
+            "cross-attention cache is per-row dense, not positional)"
+        )
+    cache: Params = {}
+    if cfg.family != "ssm":
+        kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dt
+        shape = (Lh, num_blocks + 1, block_size, Hkv, hd)
+        cache["k"] = jnp.zeros(shape, kv_dt)
+        cache["v"] = jnp.zeros(shape, kv_dt)
+        if cfg.kv_cache_dtype == "int8":
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        one = S.mamba2_init_cache(cfg, decode_width, dt)
+        cache["mamba"] = jax.tree.map(
+            lambda a: jnp.zeros((Lh,) + a.shape, a.dtype), one
+        )
+    return cache
+
+
 def _attn_decode(p, x, cache_l, pos, cfg, window: int, active=None,
-                 keys=("k", "v")):
+                 keys=("k", "v"), block_table=None, kv_ring=None):
     """x: (B, d) one token; cache_l holds (B, W, Hkv, hd) ring caches
     (plus (B, W, Hkv) scale planes when the cache is int8-quantized).
 
     ``pos``: (B,) per-slot absolute positions (continuous batching);
-    ``active``: optional (B,) bool write mask."""
+    ``active``: optional (B,) bool write mask.
+
+    With ``block_table`` (B, max_blocks) int32 the cache is PAGED instead:
+    ``cache_l[k]`` is a shared (num_blocks + 1, block_size, Hkv, hd) block
+    pool and each row reads/writes through its table (``kv_ring`` is the
+    static logical ring capacity in tokens).  The gather happens here,
+    inside the jitted decode — one launch per tick regardless of how
+    requests map onto physical blocks."""
     kk, vk = keys
     kc, vc = cache_l[kk], cache_l[vk]
     B, d = x.shape
@@ -320,6 +360,10 @@ def _attn_decode(p, x, cache_l, pos, cfg, window: int, active=None,
     if cfg.family != "audio":
         q = L.rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta).reshape(B, H, hd)
         k = L.rope(k.reshape(B, 1, Hkv, hd), posb, cfg.rope_theta).reshape(B, Hkv, hd)
+    if block_table is not None:
+        return _paged_kv_attend(
+            p, cache_l, q, k, v, pos, cfg, active, keys, block_table, kv_ring
+        )
     # cache layout: W ring slots + 1 PARKING slot (index W).  Inactive
     # batch rows write to the parking slot instead of a masked full-cache
     # jnp.where copy — the where materialized a whole-cache rewrite per
@@ -357,7 +401,59 @@ def _attn_decode(p, x, cache_l, pos, cfg, window: int, active=None,
     return L.linear(p["wo"], o.reshape(B, H * hd)), updates
 
 
-def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
+def _paged_kv_attend(p, cache_l, q, k, v, pos, cfg, active, keys,
+                     block_table, kv_ring: int):
+    """Paged read/write for one decode step.
+
+    The pool keeps ``num_blocks`` real blocks + 1 PARKING block (physical
+    index ``num_blocks``): inactive rows scatter their write there (never
+    read — the same masked-write idiom as the contiguous ring's parking
+    slot), and unassigned table entries point there so the gather below is
+    always in-bounds.  Ring arithmetic (``pos % kv_ring``) reuses blocks
+    cyclically for sliding-window architectures; attention is permutation-
+    invariant over the key axis (RoPE is applied at write time), so ring
+    order needs no unscrambling."""
+    kk, vk = keys
+    kc, vc = cache_l[kk], cache_l[vk]          # (NB+1, bs, Hkv, hd)
+    B = q.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim
+    parking = kc.shape[0] - 1
+    bs = kc.shape[1]
+    nblk = block_table.shape[1]
+    off_tot = pos % kv_ring
+    blk = off_tot // bs
+    off = off_tot % bs
+    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    act = active if active is not None else jnp.ones((B,), bool)
+    phys = jnp.where(act, phys, parking)
+    quant = cfg.kv_cache_dtype == "int8" and kk == "k"
+    updates = {}
+    if quant:
+        k8, ks = L.quantize_kv_int8(k)
+        v8, vs = L.quantize_kv_int8(v)
+        kc = kc.at[phys, off].set(k8)
+        vc = vc.at[phys, off].set(v8)
+        ksc = cache_l["k_scale"].at[phys, off].set(ks)
+        vsc = cache_l["v_scale"].at[phys, off].set(vs)
+        updates.update(k_scale=ksc, v_scale=vsc)
+        k_scale_r = ksc[block_table].reshape(B, nblk * bs, -1)
+        v_scale_r = vsc[block_table].reshape(B, nblk * bs, -1)
+    else:
+        kc = kc.at[phys, off].set(k)
+        vc = vc.at[phys, off].set(v)
+        k_scale_r = v_scale_r = None
+    updates[kk] = kc
+    updates[vk] = vc
+    # gather each row's logical view of the pool: (B, nblk*bs, Hkv, hd)
+    kb = kc[block_table].reshape(B, nblk * bs, kc.shape[2], kc.shape[3])
+    vb = vc[block_table].reshape(B, nblk * bs, vc.shape[2], vc.shape[3])
+    length = jnp.minimum(pos + 1, kv_ring)
+    o = L.decode_attention_jnp(q, kb, vb, length, k_scale_r, v_scale_r)
+    return L.linear(p["wo"], o.reshape(B, H * hd)), updates
+
+
+def _layer_decode(lp, cache_l, x, pos, cfg, active=None, block_table=None,
+                  kv_ring=None):
     fam = cfg.family
     new_cache = dict(cache_l)
     if fam == "ssm":
@@ -367,6 +463,11 @@ def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
         )
         return x + o, new_cache
     if fam == "audio":
+        if block_table is not None:
+            raise ValueError(
+                "paged KV decode does not support the audio family (the "
+                "cross-attention cache is per-row dense, not positional)"
+            )
         h = L.layernorm(lp["ln1"], x, cfg.norm_eps)
         a, upd = _attn_decode(lp["attn"], h, cache_l, pos, cfg, 0, active)
         new_cache.update(upd)
@@ -384,7 +485,8 @@ def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
     h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if fam == "hybrid":
         a, upd = _attn_decode(
-            lp["attn"], h, cache_l, pos, cfg, cfg.sliding_window, active
+            lp["attn"], h, cache_l, pos, cfg, cfg.sliding_window, active,
+            block_table=block_table, kv_ring=kv_ring,
         )
         new_cache.update(upd)
         m, new_cache["mamba"] = S.mamba2_decode_step(
@@ -396,7 +498,8 @@ def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
         ) * 0.5
         x = x + mix.astype(x.dtype)
     else:
-        a, upd = _attn_decode(lp["attn"], h, cache_l, pos, cfg, 0, active)
+        a, upd = _attn_decode(lp["attn"], h, cache_l, pos, cfg, 0, active,
+                              block_table=block_table, kv_ring=kv_ring)
         new_cache.update(upd)
         x = x + a
     h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
@@ -407,9 +510,14 @@ def _layer_decode(lp, cache_l, x, pos, cfg, active=None):
     return x + L.swiglu(lp["mlp"], h2), new_cache
 
 
-def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None):
+def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None,
+                block_tables=None, kv_ring=None):
     """tokens: (B,) int32 newest tokens; pos: () or (B,) absolute positions
     (per-slot for continuous batching); active: optional (B,) write mask.
+
+    With ``block_tables`` (B, max_blocks) int32 the cache must come from
+    ``init_paged_cache`` and ``kv_ring`` (static int) is the logical ring
+    capacity in tokens — the paged continuous-batching read/write path.
 
     Returns (logits (B, padded_vocab) f32, new cache).
     """
@@ -420,7 +528,8 @@ def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None):
     def step(carry, xs):
         h = carry
         lp, cl = xs
-        h2, ncl = _layer_decode(lp, cl, h, pos, cfg, active)
+        h2, ncl = _layer_decode(lp, cl, h, pos, cfg, active,
+                                block_tables, kv_ring)
         return h2, ncl
 
     x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))
@@ -433,7 +542,7 @@ def decode_step(params: Params, cache: Params, tokens, pos, cfg, active=None):
 
 
 def decode_chunk(params: Params, cache: Params, tokens, pos, cfg,
-                 active=None, lengths=None):
+                 active=None, lengths=None, block_tables=None, kv_ring=None):
     """Token-chunk decode: ``tokens`` (B, C) int32, ``pos`` (B,) chunk-start
     absolute positions, ``lengths`` optional (B,) valid token counts within
     the chunk (ragged tails; default C), ``active`` optional (B,) slot mask.
@@ -463,7 +572,8 @@ def decode_chunk(params: Params, cache: Params, tokens, pos, cfg,
         cache, last = carry
         toks_i, i = xs
         step_act = act & (i < lengths)
-        logits, cache = decode_step(params, cache, toks_i, pos + i, cfg, step_act)
+        logits, cache = decode_step(params, cache, toks_i, pos + i, cfg,
+                                    step_act, block_tables, kv_ring)
         keep = (step_act & (i == lengths - 1))[:, None]
         return (cache, jnp.where(keep, logits, last)), None
 

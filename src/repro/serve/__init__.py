@@ -1,1 +1,10 @@
-from .engine import Request, ServeEngine, decode_cache_size, decode_cache_stats
+from .engine import (
+    PagedServeEngine,
+    Request,
+    ServeEngine,
+    decode_cache_size,
+    decode_cache_stats,
+)
+from .paged import BlockAllocator, blocks_for_tokens
+from .scheduler import Scheduler, SLOConfig
+from .traffic import TraceConfig, TraceEntry, TrafficReport, generate_trace, run_trace

@@ -1,25 +1,42 @@
-"""Batched serving engine: prefill + decode with KV/SSM caches and
-continuous slot-based batching.
+"""Batched serving engines: prefill + decode with KV/SSM caches and
+continuous batching.
 
-The engine keeps a fixed pool of batch slots.  A request claims a free
-slot and is prefilled in **token chunks**: one masked batched
-``decode_chunk`` call per ``prefill_chunk`` prompt tokens — O(ceil(S/C))
-decode launches for a length-S prompt instead of the O(S) per-token loop
-(kept as the chunk-size-1 oracle).  Then every ``tick`` runs ONE batched
-decode step for the whole pool with per-slot positions.  New requests join
-between ticks — continuous batching without recompilation (pool size,
-chunk size and max_len are static).  When the pool is full, ``admit``
-parks the request on a FIFO wait queue drained at the start of each tick
-instead of dropping it.
+Two engines share the jitted decode substrate:
+
+* :class:`ServeEngine` — the contiguous **slot-ring** engine: a fixed pool
+  of batch slots, each with a reserved ``max_len`` KV ring.  Prefill runs
+  synchronously inside ``admit`` (in token chunks); every ``tick`` is one
+  batched decode step.  Kept as the token-parity oracle — it is the
+  simplest thing that is correct.
+
+* :class:`PagedServeEngine` — the **paged continuous-batching** engine:
+  KV lives in fixed-size blocks handed out by a free-list
+  :class:`~repro.serve.paged.BlockAllocator`; requests own block tables,
+  not slots, so concurrency is bounded by *actual* context footprint
+  instead of worst-case ``pool_size * max_len`` reservation.  A
+  :class:`~repro.serve.scheduler.Scheduler` admits and retires requests
+  every step and interleaves batched prefill chunks with decode batches
+  under a TTFT/latency SLO budget; block exhaustion preempts the
+  latest-admitted request (freed blocks + front-of-queue requeue, resumed
+  by recomputation — greedy decode makes the resumed token stream
+  identical).
+
+Greedy sampling happens INSIDE the jitted step for both engines: each
+launch returns a ``(pool,)`` int32 token vector, not ``(pool, vocab)``
+logits — the per-token device→host transfer on the decode hot path is a
+handful of ints.
 
 Admission validates prompts: empty prompts are rejected outright, and
-prompts that would scatter past the KV ring (``len(prompt) > max_len - 1``)
-are rejected instead of silently corrupting the cache.
+prompts that would scatter past the KV capacity (``len(prompt) >
+max_len - 1``) are rejected instead of silently corrupting the cache.
+Each rejected request is counted once, however many times a retry loop
+re-submits it.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -27,7 +44,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import decode_chunk, decode_step, init_cache
+from ..models import decode_chunk, decode_step, init_cache, init_paged_cache
+from .paged import BlockAllocator, blocks_for_tokens
+from .scheduler import (
+    DECODE_ACTION,
+    PREFILL,
+    PREFILL_ACTION,
+    RUNNING,
+    Scheduler,
+    SLOConfig,
+)
 
 
 @dataclasses.dataclass
@@ -92,23 +118,60 @@ def _cached_jit(key: Tuple, build: Callable[[], Callable]) -> Tuple[Callable, bo
     return _DECODE_CACHE[key], hit
 
 
+def _greedy(logits, cfg):
+    """Greedy sampling INSIDE the jitted step: ships a (B,) int32 vector
+    to the host instead of (B, padded_vocab) f32 logits every launch."""
+    return jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+
+
 def _decode_fn(cfg, pool_size: int) -> Tuple[Callable, bool]:
-    return _cached_jit(
-        ("step", repr(cfg), pool_size),
-        lambda: jax.jit(
-            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, act)
-        ),
-    )
+    def build():
+        def fn(p, c, t, pos, act):
+            logits, c2 = decode_step(p, c, t, pos, cfg, act)
+            return _greedy(logits, cfg), c2
+
+        return jax.jit(fn)
+
+    return _cached_jit(("step", repr(cfg), pool_size), build)
 
 
 def _decode_chunk_fn(cfg, pool_size: int, chunk: int) -> Tuple[Callable, bool]:
+    def build():
+        def fn(p, c, t, pos, act, lens):
+            logits, c2 = decode_chunk(p, c, t, pos, cfg, act, lens)
+            return _greedy(logits, cfg), c2
+
+        return jax.jit(fn)
+
+    return _cached_jit(("chunk", repr(cfg), pool_size, chunk), build)
+
+
+def _paged_decode_fn(cfg, width: int, ring: int, block_size: int,
+                     num_blocks: int) -> Tuple[Callable, bool]:
+    def build():
+        def fn(p, c, t, pos, act, bt):
+            logits, c2 = decode_step(p, c, t, pos, cfg, act, bt, ring)
+            return _greedy(logits, cfg), c2
+
+        return jax.jit(fn)
+
     return _cached_jit(
-        ("chunk", repr(cfg), pool_size, chunk),
-        lambda: jax.jit(
-            lambda p, c, t, pos, act, lens: decode_chunk(
-                p, c, t, pos, cfg, act, lens
-            )
-        ),
+        ("paged_step", repr(cfg), width, ring, block_size, num_blocks), build
+    )
+
+
+def _paged_chunk_fn(cfg, width: int, chunk: int, ring: int, block_size: int,
+                    num_blocks: int) -> Tuple[Callable, bool]:
+    def build():
+        def fn(p, c, t, pos, act, lens, bt):
+            logits, c2 = decode_chunk(p, c, t, pos, cfg, act, lens, bt, ring)
+            return _greedy(logits, cfg), c2
+
+        return jax.jit(fn)
+
+    return _cached_jit(
+        ("paged_chunk", repr(cfg), width, chunk, ring, block_size, num_blocks),
+        build,
     )
 
 
@@ -124,7 +187,61 @@ def decode_cache_stats() -> Dict[str, int]:
     }
 
 
-class ServeEngine:
+class _ValidationMixin:
+    """Prompt validation + once-per-request rejection accounting, shared by
+    both engines."""
+
+    def _init_validation(self):
+        self.requests_rejected = 0
+        self._rejected_ids: set = set()
+        self._rejected_refs: List[Request] = []   # pin ids against reuse
+
+    def _count_rejection(self, req: Request) -> None:
+        # retrying admit() with the same invalid request must not inflate
+        # the counter: one rejected request == one rejection
+        if id(req) not in self._rejected_ids:
+            self._rejected_ids.add(id(req))
+            self._rejected_refs.append(req)
+            self.requests_rejected += 1
+
+    def _validate(self, req: Request) -> None:
+        n = len(req.prompt)
+        if n == 0:
+            self._count_rejection(req)
+            raise ValueError(
+                f"request {req.rid}: empty prompt — there is no position to "
+                "decode from; send at least one (e.g. BOS) token"
+            )
+        if n > self.max_len - 1:
+            self._count_rejection(req)
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} exceeds the KV cache "
+                f"(max_len={self.max_len}, limit {self.max_len - 1}) — it "
+                "would silently wrap the ring and corrupt earlier positions"
+            )
+
+
+def _run_until_done(engine, max_ticks: int, strict: bool) -> int:
+    t = 0
+    while engine.busy and t < max_ticks:
+        engine.tick()
+        t += 1
+    remaining = engine.unfinished_requests
+    if remaining:
+        msg = (
+            f"run_until_done stopped at max_ticks={max_ticks} with "
+            f"{remaining} request(s) still in flight or queued — the run "
+            f"is TRUNCATED, not complete"
+        )
+        if strict:
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    return remaining
+
+
+class ServeEngine(_ValidationMixin):
+    """The contiguous slot-ring engine (token-parity oracle)."""
+
     def __init__(self, cfg, params, pool_size: int = 4, max_len: int = 512,
                  prefill_chunk: int = 16):
         self.cfg = cfg
@@ -147,7 +264,7 @@ class ServeEngine:
         self.ticks = 0
         self.tokens_generated = 0
         self.requests_completed = 0
-        self.requests_rejected = 0       # invalid prompts (never queued)
+        self._init_validation()
         self.prefill_launches = 0        # decode calls spent on prefill
         self.prefill_tokens = 0          # prompt tokens prefilled
         self.decode_launches = 0         # batched tick decode calls
@@ -155,6 +272,19 @@ class ServeEngine:
     @property
     def active_slots(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
+
+    @property
+    def inflight(self) -> int:
+        """Requests currently holding cache state (occupied slots)."""
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.wait_queue) or self.inflight > 0
+
+    @property
+    def unfinished_requests(self) -> int:
+        return len(self.wait_queue) + self.inflight
 
     def stats(self) -> Dict[str, object]:
         """Serving counters: launch accounting + queue depth.
@@ -204,27 +334,24 @@ class ServeEngine:
             self.wait_queue.append(req)
         return False
 
-    def _validate(self, req: Request) -> None:
-        n = len(req.prompt)
-        if n == 0:
-            self.requests_rejected += 1
-            raise ValueError(
-                f"request {req.rid}: empty prompt — there is no position to "
-                "decode from; send at least one (e.g. BOS) token"
-            )
-        if n > self.max_len - 1:
-            self.requests_rejected += 1
-            raise ValueError(
-                f"request {req.rid}: prompt length {n} exceeds the KV cache "
-                f"(max_len={self.max_len}, limit {self.max_len - 1}) — it "
-                "would silently wrap the ring and corrupt earlier positions"
-            )
-
     def _place(self, slot: int, req: Request) -> None:
         self.slot_req[slot] = req
         req.out_tokens = []
         req.t_admit = time.perf_counter()
+        self._reset_slot_state(slot)
         self._prefill(slot, req)
+
+    def _reset_slot_state(self, slot: int) -> None:
+        """Zero the per-slot recurrent state before a new occupant.
+
+        Attention KV needs no reset — the length mask hides stale rows —
+        but SSM/conv state is UNMASKED recurrent carry: without this, a
+        mamba/hybrid slot leaks the previous request's state into the next
+        one (wrong tokens on every slot reuse)."""
+        if "mamba" in self.cache:
+            self.cache["mamba"] = jax.tree.map(
+                lambda a: a.at[:, slot].set(0), self.cache["mamba"]
+            )
 
     def _drain_queue(self) -> None:
         while self.wait_queue:
@@ -243,13 +370,13 @@ class ServeEngine:
     def _prefill(self, slot: int, req: Request):
         toks = np.asarray(req.prompt).astype(np.int32)
         if self.prefill_chunk > 1:
-            logits = self._prefill_chunked(slot, toks)
+            out_toks = self._prefill_chunked(slot, toks)
         else:
-            logits = self._prefill_per_token(slot, toks)
+            out_toks = self._prefill_per_token(slot, toks)
         self.prefill_tokens += len(toks)
         self.slot_pos[slot] = len(toks)
         self.slot_remaining[slot] = req.max_new_tokens
-        nxt = int(np.argmax(np.asarray(logits)[slot, : self.cfg.vocab_size]))
+        nxt = int(np.asarray(out_toks)[slot])
         req.out_tokens.append(nxt)
         req.t_first = time.perf_counter()
         self.slot_last[slot] = nxt
@@ -268,7 +395,7 @@ class ServeEngine:
         C = self.prefill_chunk
         active = np.zeros(self.pool, bool)
         active[slot] = True
-        logits = None
+        out = None
         for start in range(0, len(toks), C):
             part = toks[start:start + C]
             tok_mat = np.zeros((self.pool, C), np.int32)
@@ -277,29 +404,29 @@ class ServeEngine:
             lengths[slot] = len(part)
             pos = self.slot_pos.copy()
             pos[slot] = start
-            logits, self.cache = self._decode_chunk(
+            out, self.cache = self._decode_chunk(
                 self.params, self.cache, jnp.asarray(tok_mat),
                 jnp.asarray(pos), jnp.asarray(active), jnp.asarray(lengths),
             )
             self.prefill_launches += 1
-        return logits
+        return out
 
     def _prefill_per_token(self, slot: int, toks: np.ndarray):
         """The chunk-size-1 oracle: one decode launch per prompt token."""
         active = np.zeros(self.pool, bool)
         active[slot] = True
-        logits = None
+        out = None
         for i, t in enumerate(toks):
             tok_vec = np.zeros(self.pool, np.int32)
             tok_vec[slot] = t
             pos = self.slot_pos.copy()
             pos[slot] = i
-            logits, self.cache = self._decode(
+            out, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(tok_vec),
                 jnp.asarray(pos), jnp.asarray(active),
             )
             self.prefill_launches += 1
-        return logits
+        return out
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
@@ -317,15 +444,15 @@ class ServeEngine:
         if not active.any():
             return
         toks = self.slot_last.copy()
-        logits, self.cache = self._decode(
+        out, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self.slot_pos), jnp.asarray(active),
         )
         self.decode_launches += 1
-        arr = np.asarray(logits)
+        arr = np.asarray(out)
         for s in np.nonzero(active)[0]:
             r = self.slot_req[s]
-            nxt = int(np.argmax(arr[s, : self.cfg.vocab_size]))
+            nxt = int(arr[s])
             r.out_tokens.append(nxt)
             self.slot_last[s] = nxt
             self.slot_pos[s] += 1
@@ -335,10 +462,428 @@ class ServeEngine:
                 self._finish(s)
         self.ticks += 1
 
-    def run_until_done(self, max_ticks: int = 2000):
-        t = 0
-        while (
-            self.wait_queue or any(r is not None for r in self.slot_req)
-        ) and t < max_ticks:
-            self.tick()
-            t += 1
+    def run_until_done(self, max_ticks: int = 2000, strict: bool = False) -> int:
+        """Tick until idle or ``max_ticks``.  Returns the number of
+        requests still unfinished (0 == complete); a truncated run warns,
+        or raises RuntimeError with ``strict=True`` — harnesses must not
+        mistake a truncated run for a completed one."""
+        return _run_until_done(self, max_ticks, strict)
+
+
+# ======================================================================
+# paged continuous batching
+# ======================================================================
+@dataclasses.dataclass
+class _Row:
+    """One decode-batch row of the paged engine (NOT a KV reservation —
+    KV lives in blocks owned by the request's block table)."""
+    req: Optional[Request] = None
+    state: str = ""
+    ctx: Optional[np.ndarray] = None   # tokens to feed: prompt [+ resumed out]
+    fed: int = 0                       # prefill progress into ctx
+    pos: int = 0                       # next absolute write position
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    last_tok: int = 0
+    remaining: int = 0
+    admit_seq: int = -1
+
+
+class PagedServeEngine(_ValidationMixin):
+    """Continuous batching over paged KV memory.
+
+    ``decode_width`` is the batched-launch width (how many requests decode
+    per tick); KV memory is ``num_blocks * block_size`` tokens TOTAL,
+    shared by every in-flight request through per-request block tables.
+    With the same KV budget as a slot engine (``pool * max_len`` tokens),
+    short-context traffic sustains many times ``pool`` in-flight requests.
+    """
+
+    def __init__(self, cfg, params, decode_width: int = 16,
+                 max_len: int = 512, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 16,
+                 slo: Optional[SLOConfig] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if decode_width <= 0:
+            raise ValueError(f"decode_width must be positive, got {decode_width}")
+        self.cfg = cfg
+        self.params = params
+        self.width = decode_width
+        self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
+        self._clock = clock
+        # logical ring capacity in tokens (sliding-window archs reuse
+        # blocks cyclically past the window) — same formula as init_cache
+        self.kv_ring = (
+            max_len if not cfg.sliding_window
+            else min(cfg.sliding_window, max_len)
+        )
+        self.needs_kv = cfg.family != "ssm"
+        self.block_size = block_size
+        self.blocks_per_req = (
+            blocks_for_tokens(self.kv_ring, block_size, self.kv_ring)
+            if self.needs_kv else 0
+        )
+        if not self.needs_kv:
+            num_blocks = 0
+        elif num_blocks is None:
+            # no-pressure default: worst case for every row
+            num_blocks = decode_width * self.blocks_per_req
+        if self.needs_kv and num_blocks < self.blocks_per_req:
+            raise ValueError(
+                f"num_blocks={num_blocks} cannot hold even one max-length "
+                f"context ({self.blocks_per_req} blocks of {block_size}) — "
+                "a lone request could deadlock"
+            )
+        self.num_blocks = num_blocks
+        self.allocator = (
+            BlockAllocator(num_blocks, block_size) if self.needs_kv else None
+        )
+        self.cache = init_paged_cache(cfg, num_blocks, block_size, decode_width)
+        # logical->physical tables, parking-filled (physical id num_blocks)
+        self._parking = num_blocks
+        self._table = np.full(
+            (decode_width, max(1, self.blocks_per_req)), self._parking,
+            np.int32,
+        )
+        self.rows = [_Row() for _ in range(decode_width)]
+        self.sched = Scheduler(slo, clock)
+        self._decode, self.decode_cache_hit = _paged_decode_fn(
+            cfg, decode_width, self.kv_ring, block_size, num_blocks
+        )
+        self._chunk, _ = _paged_chunk_fn(
+            cfg, decode_width, self.prefill_chunk, self.kv_ring, block_size,
+            num_blocks,
+        )
+        self._admit_seq = 0
+        self.ticks = 0
+        self.tokens_generated = 0
+        self.requests_completed = 0
+        self._init_validation()
+        self.prefill_launches = 0
+        self.prefill_tokens = 0
+        self.decode_launches = 0
+        self.max_inflight = 0
+        self._inflight_ticks = 0
+        self._util_ticks = 0.0
+
+    # ------------------------------------------------------- properties
+    @property
+    def inflight(self) -> int:
+        """Requests currently holding rows/blocks (prefilling or running)."""
+        return sum(r.req is not None for r in self.rows)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.sched.waiting) or self.inflight > 0
+
+    @property
+    def unfinished_requests(self) -> int:
+        return len(self.sched.waiting) + self.inflight
+
+    @property
+    def wait_queue(self):
+        """Launcher compatibility: the scheduler's FIFO wait queue."""
+        return self.sched.waiting
+
+    def stats(self) -> Dict[str, object]:
+        st: Dict[str, object] = {
+            "ticks": self.ticks,
+            "tokens_generated": self.tokens_generated,
+            "requests_completed": self.requests_completed,
+            "requests_rejected": self.requests_rejected,
+            "prefill_launches": self.prefill_launches,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_launches": self.decode_launches,
+            "prefill_chunk": self.prefill_chunk,
+            "decode_width": self.width,
+            "queue_depth": len(self.sched.waiting),
+            "inflight": self.inflight,
+            "max_inflight": self.max_inflight,
+            "mean_inflight": self._inflight_ticks / max(1, self.ticks),
+            "preemptions": self.sched.preemptions,
+            "scheduler": self.sched.stats(),
+            "decode_cache": decode_cache_stats(),
+        }
+        if self.allocator is not None:
+            kv = self.allocator.stats()
+            kv["mean_utilization"] = self._util_ticks / max(1, self.ticks)
+            st["kv_blocks"] = kv
+        return st
+
+    # ------------------------------------------------------------ admit
+    def admit(self, req: Request) -> bool:
+        """Asynchronous admission: True == the request owns a decode row
+        and will prefill over the next ticks; False == parked on the FIFO
+        wait queue (never dropped).  No model launch happens here — prefill
+        is the scheduler's job, interleaved with decode under the SLO."""
+        self._validate(req)
+        if req.done or any(r.req is req for r in self.rows):
+            return False
+        if req.t_submit is None:
+            req.t_submit = self._clock()
+        self._admit_from_queue()
+        if any(r.req is req for r in self.rows):
+            return True
+        # FIFO: nobody overtakes a still-backed-up queue
+        if not self.sched.waiting and self._try_place(req):
+            return True
+        if not any(q is req for q in self.sched.waiting):
+            self.sched.enqueue(req)
+        return False
+
+    def _admit_from_queue(self) -> None:
+        while self.sched.waiting:
+            head = self.sched.waiting[0]
+            if head.done or any(r.req is head for r in self.rows):
+                self.sched.waiting.popleft()   # stale entry
+                continue
+            if not self._try_place(head):
+                return                         # head-of-line blocks: FIFO
+            self.sched.waiting.popleft()
+
+    def _try_place(self, req: Request) -> bool:
+        free_row = next(
+            (i for i, r in enumerate(self.rows) if r.req is None), None
+        )
+        if free_row is None:
+            return False
+        ctx_len = len(req.prompt) + len(req.out_tokens or ())
+        if self.allocator is not None:
+            needed = blocks_for_tokens(ctx_len, self.block_size, self.kv_ring)
+            # admission gate: the whole context must fit in FREE blocks now,
+            # or prefill would immediately preempt someone (churn)
+            if not self.allocator.can_alloc(needed):
+                return False
+        self._place_row(free_row, req)
+        return True
+
+    def _place_row(self, idx: int, req: Request) -> None:
+        row = self.rows[idx]
+        if req.out_tokens is None:
+            req.out_tokens = []
+        if req.t_admit is None:
+            req.t_admit = self._clock()
+        # resumed-after-preemption requests re-feed prompt + everything
+        # already emitted (recompute preemption): greedy decode makes the
+        # continuation token-identical to the uninterrupted run
+        row.req = req
+        row.state = PREFILL
+        row.ctx = np.concatenate(
+            [np.asarray(req.prompt, np.int32).ravel(),
+             np.asarray(req.out_tokens, np.int32)]
+        ).astype(np.int32)
+        row.fed = 0
+        row.pos = 0
+        row.blocks = []
+        row.last_tok = 0
+        row.remaining = req.max_new_tokens - len(req.out_tokens)
+        row.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.sched.admitted += 1
+        self._table[idx, :] = self._parking
+        self._reset_row_state(idx)
+
+    def _reset_row_state(self, idx: int) -> None:
+        """Zero per-row recurrent (SSM/conv) state for a new occupant —
+        the unmasked carry would otherwise leak across requests."""
+        if "mamba" in self.cache:
+            self.cache["mamba"] = jax.tree.map(
+                lambda a: a.at[:, idx].set(0), self.cache["mamba"]
+            )
+
+    # ------------------------------------------------------ block paging
+    def _ensure_blocks(self, idx: int, tokens_upto: int) -> None:
+        """Grow ``idx``'s block table to cover ``tokens_upto`` context
+        tokens, preempting the latest-admitted other request on exhaustion
+        (eager-release + recompute, vLLM-style)."""
+        if self.allocator is None:
+            return
+        row = self.rows[idx]
+        needed = blocks_for_tokens(tokens_upto, self.block_size, self.kv_ring)
+        while len(row.blocks) < needed:
+            got = self.allocator.alloc(needed - len(row.blocks))
+            if got is None:
+                if not self._preempt_latest(exclude=idx):
+                    raise RuntimeError(
+                        "KV block pool exhausted with nothing left to "
+                        "preempt — num_blocks < blocks_per_req?"
+                    )
+                continue
+            start = len(row.blocks)
+            row.blocks.extend(got)
+            self._table[idx, start:start + len(got)] = got
+
+    def _preempt_latest(self, exclude: int) -> bool:
+        victims = [
+            (self.rows[i].admit_seq, i)
+            for i, r in enumerate(self.rows)
+            if r.req is not None and i != exclude
+        ]
+        if not victims:
+            return False
+        _, idx = max(victims)
+        self._preempt(idx)
+        return True
+
+    def _preempt(self, idx: int) -> None:
+        row = self.rows[idx]
+        req = row.req
+        if self.allocator is not None and row.blocks:
+            self.allocator.free(row.blocks)
+        self._clear_row(idx)
+        # front of the queue: FIFO by submission survives preemption
+        self.sched.requeue_front(req)
+
+    def _clear_row(self, idx: int) -> None:
+        self.rows[idx] = _Row()
+        self._table[idx, :] = self._parking
+
+    # ------------------------------------------------------------- tick
+    def tick(self) -> None:
+        """One scheduler step: retire/admit, then ONE batched launch —
+        a prefill chunk for every prefilling row, or a decode step for
+        every running row — picked under the SLO budget."""
+        self._admit_from_queue()
+        prefill_rows = [
+            i for i, r in enumerate(self.rows)
+            if r.req is not None and r.state == PREFILL
+        ]
+        running_rows = [
+            i for i, r in enumerate(self.rows)
+            if r.req is not None and r.state == RUNNING
+        ]
+        oldest_wait = None
+        chunks_rem = 0
+        if prefill_rows:
+            oldest = min(prefill_rows, key=lambda i: self.rows[i].admit_seq)
+            r = self.rows[oldest]
+            now = self._clock()
+            oldest_wait = now - (r.req.t_submit if r.req.t_submit is not None
+                                 else now)
+            chunks_rem = -(-(len(r.ctx) - r.fed) // self.prefill_chunk)
+        action = self.sched.choose(
+            len(prefill_rows), len(running_rows), oldest_wait, chunks_rem
+        )
+        if action == PREFILL_ACTION:
+            self._prefill_launch(prefill_rows)
+        elif action == DECODE_ACTION:
+            self._decode_launch(running_rows)
+        self.ticks += 1
+        infl = self.inflight
+        self.max_inflight = max(self.max_inflight, infl)
+        self._inflight_ticks += infl
+        if self.allocator is not None:
+            self._util_ticks += self.allocator.utilization
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_launch(self, prefill_rows: List[int]) -> None:
+        """ONE masked ``decode_chunk`` launch advancing EVERY prefilling
+        row by up to ``prefill_chunk`` of its own prompt tokens (per-row
+        pos + ragged lengths) — batched prefill across requests, not just
+        within one."""
+        C = self.prefill_chunk
+        for i in list(prefill_rows):
+            row = self.rows[i]
+            if row.req is None or row.state != PREFILL:
+                continue    # preempted by an earlier row's allocation
+            part_len = min(C, len(row.ctx) - row.fed)
+            self._ensure_blocks(i, row.fed + part_len)
+        launched = [
+            i for i in prefill_rows
+            if self.rows[i].req is not None and self.rows[i].state == PREFILL
+        ]
+        if not launched:
+            return
+        tok_mat = np.zeros((self.width, C), np.int32)
+        lens = np.zeros(self.width, np.int32)
+        posv = np.zeros(self.width, np.int32)
+        act = np.zeros(self.width, bool)
+        for i in launched:
+            row = self.rows[i]
+            part = row.ctx[row.fed:row.fed + C]
+            tok_mat[i, : len(part)] = part
+            lens[i] = len(part)
+            posv[i] = row.fed
+            act[i] = True
+        t0 = self._clock()
+        out, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(tok_mat), jnp.asarray(posv),
+            jnp.asarray(act), jnp.asarray(lens), jnp.asarray(self._table),
+        )
+        toks = np.asarray(out)
+        self.sched.observe_launch(PREFILL_ACTION, self._clock() - t0)
+        self.prefill_launches += 1
+        for i in launched:
+            row = self.rows[i]
+            row.fed += int(lens[i])
+            self.prefill_tokens += int(lens[i])
+            if row.fed >= len(row.ctx):
+                # prefill complete: the chunk's last-valid-position logits
+                # already produced this row's next token inside the jit
+                row.pos = row.fed
+                row.state = RUNNING
+                if row.req.t_first is None:
+                    row.req.t_first = self._clock()
+                self._append_token(i, int(toks[i]))
+
+    # ----------------------------------------------------------- decode
+    def _decode_launch(self, running_rows: List[int]) -> None:
+        for i in list(running_rows):
+            row = self.rows[i]
+            if row.req is None or row.state != RUNNING:
+                continue
+            self._ensure_blocks(i, row.pos + 1)
+        launched = [
+            i for i in running_rows
+            if self.rows[i].req is not None and self.rows[i].state == RUNNING
+        ]
+        if not launched:
+            return
+        toks = np.zeros(self.width, np.int32)
+        posv = np.zeros(self.width, np.int32)
+        act = np.zeros(self.width, bool)
+        for i in launched:
+            row = self.rows[i]
+            toks[i] = row.last_tok
+            posv[i] = row.pos
+            act[i] = True
+        t0 = self._clock()
+        out, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(posv),
+            jnp.asarray(act), jnp.asarray(self._table),
+        )
+        arr = np.asarray(out)
+        self.sched.observe_launch(DECODE_ACTION, self._clock() - t0)
+        self.decode_launches += 1
+        for i in launched:
+            self.rows[i].pos += 1
+            self._append_token(i, int(arr[i]))
+
+    def _append_token(self, idx: int, tok: int) -> None:
+        row = self.rows[idx]
+        req = row.req
+        req.out_tokens.append(tok)
+        row.last_tok = tok
+        row.remaining -= 1
+        self.tokens_generated += 1
+        # same stop rule as the slot engine: budget exhausted, or the next
+        # write would land past the context capacity
+        if row.remaining <= 0 or row.pos >= self.max_len - 1:
+            self._finish_row(idx)
+
+    def _finish_row(self, idx: int) -> None:
+        row = self.rows[idx]
+        req = row.req
+        req.done = True
+        req.t_done = self._clock()
+        self.requests_completed += 1
+        if self.allocator is not None and row.blocks:
+            self.allocator.free(row.blocks)   # eager release, like the
+            # executor's last-use buffer-slot frees
+        self._clear_row(idx)
+
+    def run_until_done(self, max_ticks: int = 5000, strict: bool = False) -> int:
+        """Tick until idle or ``max_ticks``.  Returns the number of
+        requests still unfinished (0 == complete); a truncated run warns,
+        or raises RuntimeError with ``strict=True``."""
+        return _run_until_done(self, max_ticks, strict)

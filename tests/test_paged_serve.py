@@ -1,0 +1,349 @@
+"""Paged continuous batching: block allocator, paged-vs-slot token parity
+(the slot ring is the oracle), preemption-by-recomputation, scheduler
+fairness/liveness, and the traffic harness."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_params
+from repro.serve import (
+    BlockAllocator,
+    PagedServeEngine,
+    Request,
+    Scheduler,
+    ServeEngine,
+    SLOConfig,
+    TraceConfig,
+    blocks_for_tokens,
+    generate_trace,
+    run_trace,
+)
+from repro.serve.scheduler import DECODE_ACTION, IDLE_ACTION, PREFILL_ACTION
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    return cfg, init_params(cfg, 0)
+
+
+# ---------------------------------------------------------- allocator
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(1, 4, 32) == 1
+    assert blocks_for_tokens(4, 4, 32) == 1
+    assert blocks_for_tokens(5, 4, 32) == 2
+    assert blocks_for_tokens(100, 4, 32) == 8   # ring caps the need
+
+
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    got = a.alloc(3)
+    assert got is not None and len(got) == 3
+    assert len(set(got)) == 3                   # no double-assignment
+    assert a.num_free == 1 and a.num_in_use == 3
+    assert a.alloc(2) is None                   # all-or-nothing
+    assert a.alloc_failures == 1
+    assert a.num_free == 1                      # failed alloc takes nothing
+    a.free(got)
+    assert a.num_free == 4 and a.num_in_use == 0
+    a.check_consistent()
+    assert a.stats()["peak_in_use"] == 3
+
+
+def test_allocator_double_free_raises():
+    a = BlockAllocator(num_blocks=2, block_size=4)
+    got = a.alloc(1)
+    a.free(got)
+    with pytest.raises(RuntimeError, match="double free|not allocated"):
+        a.free(got)
+    with pytest.raises(RuntimeError, match="not allocated"):
+        a.free([99])                            # foreign block
+    a.check_consistent()
+
+
+# ------------------------------------------------------- token parity
+def test_paged_matches_slot_engine_single_request(small_model):
+    """Acceptance criterion: for any single request the paged engine emits
+    exactly the slot-ring oracle's token sequence (several prompt lengths,
+    crossing block boundaries and the chunked-prefill ragged tail)."""
+    cfg, params = small_model
+    for plen, chunk in ((1, 4), (3, 4), (7, 4), (12, 8), (17, 4)):
+        prompt = (np.arange(plen) % 100 + 1).astype(np.int32)
+        oracle = Request(rid=0, prompt=prompt, max_new_tokens=6)
+        e1 = ServeEngine(cfg, params, pool_size=2, max_len=32,
+                         prefill_chunk=chunk)
+        e1.admit(oracle)
+        e1.run_until_done()
+
+        req = Request(rid=0, prompt=prompt, max_new_tokens=6)
+        e2 = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                              block_size=4, prefill_chunk=chunk)
+        e2.admit(req)
+        assert e2.run_until_done() == 0
+        assert req.out_tokens == oracle.out_tokens, (plen, chunk)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "hymba-1.5b"])
+def test_paged_matches_slot_engine_other_families(arch):
+    """SSM rows (no KV blocks at all) and the hybrid sliding-window family
+    (block tables over a ring smaller than max_len) hit different paged
+    paths — parity must hold for both."""
+    cfg = reduced_config(get_config(arch))
+    params = init_params(cfg, 0)
+    prompt = np.arange(1, 10, dtype=np.int32)
+    oracle = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    e1 = ServeEngine(cfg, params, pool_size=2, max_len=32, prefill_chunk=4)
+    e1.admit(oracle)
+    e1.run_until_done()
+
+    req = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    e2 = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                          block_size=4, prefill_chunk=4)
+    e2.admit(req)
+    assert e2.run_until_done() == 0
+    assert req.out_tokens == oracle.out_tokens
+
+
+def test_paged_batch_isolation(small_model):
+    """A request's tokens must not depend on what shares the decode batch
+    or which physical blocks it happens to get."""
+    cfg, params = small_model
+    prompt = np.array([5, 9, 2, 17], np.int32)
+    solo = Request(rid=0, prompt=prompt, max_new_tokens=5)
+    e1 = PagedServeEngine(cfg, params, decode_width=4, max_len=32,
+                          block_size=4, prefill_chunk=4)
+    e1.admit(solo)
+    e1.run_until_done()
+
+    e2 = PagedServeEngine(cfg, params, decode_width=4, max_len=32,
+                          block_size=4, prefill_chunk=4)
+    others = [
+        Request(rid=i, prompt=np.full(6, 3 + i, np.int32), max_new_tokens=8)
+        for i in (1, 2)
+    ]
+    same = Request(rid=3, prompt=prompt, max_new_tokens=5)
+    for r in others:
+        e2.admit(r)
+    e2.admit(same)
+    e2.run_until_done()
+    assert same.out_tokens == solo.out_tokens
+
+
+def test_paged_mid_stream_admission(small_model):
+    cfg, params = small_model
+    eng = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                           block_size=4, prefill_chunk=4)
+    r1 = Request(rid=0, prompt=np.array([1, 2, 3]), max_new_tokens=10)
+    eng.admit(r1)
+    eng.tick()
+    eng.tick()
+    r2 = Request(rid=1, prompt=np.array([7, 8]), max_new_tokens=4)
+    assert eng.admit(r2)             # joins while r1 is mid-generation
+    assert eng.run_until_done() == 0
+    assert len(r1.out_tokens) == 10 and len(r2.out_tokens) == 4
+
+
+# ------------------------------------------------ preemption/recompute
+def test_preemption_resume_token_parity(small_model):
+    """A pool of exactly one max-length context forces the two requests to
+    fight for blocks; the preempted one resumes by recomputation and must
+    still emit its solo token sequence."""
+    cfg, params = small_model
+    p1 = np.arange(1, 13, dtype=np.int32)
+    p2 = np.arange(20, 32, dtype=np.int32)
+    solo = {}
+    for i, p in enumerate((p1, p2)):
+        e = ServeEngine(cfg, params, pool_size=1, max_len=32, prefill_chunk=4)
+        r = Request(rid=i, prompt=p, max_new_tokens=16)
+        e.admit(r)
+        e.run_until_done()
+        solo[i] = r.out_tokens
+
+    eng = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                           block_size=4, num_blocks=8, prefill_chunk=4)
+    ra = Request(rid=0, prompt=p1, max_new_tokens=16)
+    rb = Request(rid=1, prompt=p2, max_new_tokens=16)
+    eng.admit(ra)
+    eng.admit(rb)
+    assert eng.run_until_done(max_ticks=1000) == 0
+    assert eng.sched.preemptions > 0, "pool was sized to force preemption"
+    assert ra.out_tokens == solo[0]
+    assert rb.out_tokens == solo[1]
+    eng.allocator.check_consistent()
+    assert eng.allocator.num_in_use == 0
+
+
+def test_single_request_pool_floor_enforced(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="cannot hold even one"):
+        PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                         block_size=4, num_blocks=5)
+
+
+# --------------------------------------------------- fairness/liveness
+def test_bursty_trace_liveness_and_no_block_leak(small_model):
+    """Under bursty arrivals over an undersized pool every admitted request
+    must eventually finish, no block may be double-assigned, and every
+    freed block must return to the pool."""
+    cfg, params = small_model
+    tc = TraceConfig(num_requests=32, arrival="bursty", burst_size=12,
+                     burst_gap_ticks=8.0, prompt_len_lo=3, prompt_len_hi=10,
+                     max_new_lo=3, max_new_hi=8, vocab_size=cfg.vocab_size,
+                     seed=3)
+    eng = PagedServeEngine(cfg, params, decode_width=8, max_len=32,
+                           block_size=4, num_blocks=16, prefill_chunk=4)
+    rep = run_trace(eng, generate_trace(tc), max_ticks=20_000, strict=True)
+    assert rep.completed == rep.total == 32
+    assert rep.unfinished == 0
+    eng.allocator.check_consistent()       # no double-assign, no leak
+    assert eng.allocator.num_in_use == 0
+    st = eng.allocator.stats()
+    assert st["allocated_total"] == st["freed_total"]
+
+
+def test_paged_fifo_admission_order(small_model):
+    """Queued requests claim rows in submission order even when later ones
+    are smaller and would fit sooner."""
+    cfg, params = small_model
+    eng = PagedServeEngine(cfg, params, decode_width=1, max_len=32,
+                           block_size=4, num_blocks=8, prefill_chunk=4)
+    reqs = [
+        Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=3),
+        Request(rid=1, prompt=np.arange(1, 7, dtype=np.int32), max_new_tokens=3),
+        Request(rid=2, prompt=np.array([1], np.int32), max_new_tokens=3),
+    ]
+    assert eng.admit(reqs[0]) is True
+    assert eng.admit(reqs[1]) is False     # queued (width 1)
+    assert eng.admit(reqs[2]) is False
+    assert eng.run_until_done() == 0
+    assert reqs[0].t_first <= reqs[1].t_first <= reqs[2].t_first
+    assert all(len(r.out_tokens) == 3 for r in reqs)
+
+
+def test_paged_rejection_and_truncation_satellites(small_model):
+    cfg, params = small_model
+    eng = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                           block_size=4, prefill_chunk=4)
+    bad = Request(rid=0, prompt=np.ones(40, np.int32))
+    for _ in range(3):
+        with pytest.raises(ValueError, match="exceeds the KV cache"):
+            eng.admit(bad)
+    assert eng.requests_rejected == 1      # counted once across retries
+
+    slow = Request(rid=1, prompt=np.array([1, 2]), max_new_tokens=25)
+    eng.admit(slow)
+    with pytest.warns(RuntimeWarning, match="TRUNCATED"):
+        remaining = eng.run_until_done(max_ticks=2)
+    assert remaining == 1
+    with pytest.raises(RuntimeError, match="TRUNCATED"):
+        eng.run_until_done(max_ticks=1, strict=True)
+    assert eng.run_until_done() == 0 and slow.done
+
+
+def test_paged_concurrency_exceeds_slot_pool(small_model):
+    """The tentpole claim at test scale: same total KV budget (16 blocks x
+    4 == 2 slots x 32 tokens), short requests — the paged engine runs >=4x
+    the slot engine's pool in flight at once."""
+    cfg, params = small_model
+    tc = TraceConfig(num_requests=24, arrival="bursty", burst_size=24,
+                     prompt_len_lo=3, prompt_len_hi=6, max_new_lo=3,
+                     max_new_hi=4, vocab_size=cfg.vocab_size, seed=4)
+    trace = generate_trace(tc)
+    paged = PagedServeEngine(cfg, params, decode_width=8, max_len=32,
+                             block_size=4, num_blocks=16, prefill_chunk=4)
+    pr = run_trace(paged, trace, max_ticks=20_000, strict=True)
+    slot = ServeEngine(cfg, params, pool_size=2, max_len=32, prefill_chunk=4)
+    sr = run_trace(slot, trace, max_ticks=20_000, strict=True)
+    assert pr.completed == sr.completed == 24
+    assert pr.max_inflight >= 4 * sr.max_inflight
+
+
+# ---------------------------------------------------------- scheduler
+def test_scheduler_alternates_without_slo():
+    clock = iter(float(i) for i in range(1000))
+    s = Scheduler(clock=lambda: next(clock))
+    assert s.choose(0, 0) == IDLE_ACTION
+    assert s.choose(1, 0) == PREFILL_ACTION
+    assert s.choose(0, 1) == DECODE_ACTION
+    # contested: strict alternation, deterministic in ticks
+    seq = [s.choose(1, 1) for _ in range(4)]
+    assert seq == [PREFILL_ACTION, DECODE_ACTION, PREFILL_ACTION,
+                   DECODE_ACTION]
+
+
+def test_scheduler_decode_slo_overrides_prefill():
+    t = [0.0]
+    s = Scheduler(SLOConfig(decode_slo_s=0.5), clock=lambda: t[0])
+    assert s.choose(1, 1) == PREFILL_ACTION   # first contested pick
+    t[0] = 0.1
+    assert s.choose(1, 1) == DECODE_ACTION    # alternation
+    t[0] = 1.0                                 # decode gap 0.9 > 0.5 SLO
+    assert s.choose(1, 1) == DECODE_ACTION    # override, not alternation
+    assert s.decode_overrides == 1
+
+
+def test_scheduler_ttft_slo_overrides_decode():
+    t = [0.0]
+    s = Scheduler(SLOConfig(ttft_slo_s=1.0, safety=0.8), clock=lambda: t[0])
+    s.observe_launch(PREFILL_ACTION, 0.2)
+    assert s.choose(1, 1) == PREFILL_ACTION
+    assert s.choose(1, 1) == DECODE_ACTION
+    # oldest waited 0.7s + 2 chunks * 0.2s EMA = 1.1 > 0.8 * 1.0
+    assert s.choose(1, 1, oldest_prefill_wait_s=0.7,
+                    chunks_remaining=2) == PREFILL_ACTION
+    assert s.ttft_overrides == 1
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="ttft_slo_s"):
+        SLOConfig(ttft_slo_s=-1.0)
+    with pytest.raises(ValueError, match="safety"):
+        SLOConfig(safety=0.0)
+
+
+# ----------------------------------------------------- traffic harness
+def test_generate_trace_deterministic_and_sorted():
+    tc = TraceConfig(num_requests=16, arrival="poisson", seed=7)
+    a = generate_trace(tc)
+    b = generate_trace(tc)
+    assert [e.arrive_tick for e in a] == [e.arrive_tick for e in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    ticks = [e.arrive_tick for e in a]
+    assert ticks == sorted(ticks)
+    with pytest.raises(ValueError, match="arrival"):
+        TraceConfig(arrival="adversarial")
+
+
+def test_traffic_report_fields(small_model):
+    cfg, params = small_model
+    tc = TraceConfig(num_requests=8, arrival="poisson",
+                     mean_interarrival_ticks=0.5, prompt_len_lo=2,
+                     prompt_len_hi=5, max_new_lo=2, max_new_hi=3,
+                     vocab_size=cfg.vocab_size, seed=5)
+    eng = PagedServeEngine(cfg, params, decode_width=4, max_len=32,
+                           block_size=4, prefill_chunk=4)
+    rep = run_trace(eng, generate_trace(tc), max_ticks=5_000, strict=True)
+    assert rep.completed == rep.total == 8
+    assert rep.tokens_out > 0 and rep.tokens_per_s > 0
+    assert rep.ttft_p50_ms <= rep.ttft_p99_ms
+    assert rep.latency_p50_ms <= rep.latency_p99_ms
+    assert 1 <= rep.max_inflight <= 4
+    assert "done in" in rep.summary()
+
+
+def test_paged_engine_stats_shape(small_model):
+    cfg, params = small_model
+    eng = PagedServeEngine(cfg, params, decode_width=2, max_len=32,
+                           block_size=4, prefill_chunk=4)
+    req = Request(rid=0, prompt=np.array([1, 2, 3]), max_new_tokens=3)
+    eng.admit(req)
+    eng.run_until_done()
+    st = eng.stats()
+    assert st["requests_completed"] == 1
+    assert st["tokens_generated"] == 3
+    assert st["kv_blocks"]["in_use"] == 0
+    assert st["kv_blocks"]["freed_total"] == st["kv_blocks"]["allocated_total"]
+    assert st["scheduler"]["admitted"] == 1
+    assert st["max_inflight"] == 1

@@ -227,6 +227,102 @@ def test_request_latency_stats_populated(small_model):
     assert st["decode_launches"] == st["ticks"]
 
 
+# ------------------------------------------- run_until_done truncation
+def test_run_until_done_reports_truncation(small_model):
+    """Stopping at max_ticks used to look exactly like completion; now the
+    leftover count comes back, with a warning (or strict=True raises)."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64, prefill_chunk=4)
+    r1 = Request(rid=0, prompt=np.array([1, 2]), max_new_tokens=30)
+    r2 = Request(rid=1, prompt=np.array([3, 4]), max_new_tokens=30)
+    eng.admit(r1)
+    eng.admit(r2)
+    with pytest.warns(RuntimeWarning, match="TRUNCATED"):
+        remaining = eng.run_until_done(max_ticks=3)
+    assert remaining == 2            # r1 mid-stream + r2 still queued
+    with pytest.raises(RuntimeError, match="TRUNCATED"):
+        eng.run_until_done(max_ticks=1, strict=True)
+    assert eng.run_until_done() == 0
+    assert r1.done and r2.done
+
+
+def test_run_until_done_complete_returns_zero_no_warning(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=64, prefill_chunk=4)
+    req = Request(rid=0, prompt=np.array([1, 2]), max_new_tokens=3)
+    eng.admit(req)
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        assert eng.run_until_done() == 0
+    assert req.done
+
+
+# ------------------------------------------ rejection double-counting
+def test_rejected_request_counted_once_across_retries(small_model):
+    """A retry loop re-admitting the same invalid request must not inflate
+    requests_rejected — one rejected request == one rejection."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, pool_size=1, max_len=32)
+    bad = Request(rid=0, prompt=np.ones(40, np.int32))
+    for _ in range(3):
+        with pytest.raises(ValueError, match="exceeds the KV cache"):
+            eng.admit(bad)
+    assert eng.requests_rejected == 1
+    # a DIFFERENT invalid request still counts
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit(Request(rid=1, prompt=np.array([], dtype=np.int32)))
+    assert eng.requests_rejected == 2
+
+
+# -------------------------------------------- SSM slot-reuse state reset
+def test_ssm_slot_reuse_resets_recurrent_state():
+    """Attention KV is masked by length, but SSM/conv state is unmasked
+    recurrent carry: a slot's second occupant must decode as if the first
+    had never existed."""
+    cfg = reduced_config(get_config("mamba2-1.3b"))
+    params = init_params(cfg, 0)
+    prompt_b = np.array([40, 41, 42, 43, 44])
+
+    solo = Request(rid=0, prompt=prompt_b, max_new_tokens=5)
+    e1 = ServeEngine(cfg, params, pool_size=1, max_len=32, prefill_chunk=4)
+    e1.admit(solo)
+    e1.run_until_done()
+
+    e2 = ServeEngine(cfg, params, pool_size=1, max_len=32, prefill_chunk=4)
+    first = Request(rid=1, prompt=np.array([7, 8, 9]), max_new_tokens=5)
+    e2.admit(first)
+    e2.run_until_done()
+    reused = Request(rid=2, prompt=prompt_b, max_new_tokens=5)
+    e2.admit(reused)                 # same slot, previously occupied
+    e2.run_until_done()
+    assert reused.out_tokens == solo.out_tokens
+
+
+# -------------------------------------------- greedy sampling inside jit
+def test_decode_fn_returns_token_vector(small_model):
+    """The jitted step ships a (pool,) int32 token vector, not
+    (pool, vocab) logits — argmax happens on device inside the jit."""
+    import jax
+
+    from repro.models import init_cache
+    from repro.serve.engine import _decode_fn
+
+    cfg, params = small_model
+    pool = 2
+    fn, _ = _decode_fn(cfg, pool)
+    cache = init_cache(cfg, pool, 16)
+    toks, cache = fn(
+        params, cache, jnp.zeros(pool, jnp.int32), jnp.zeros(pool, jnp.int32),
+        jnp.ones(pool, bool),
+    )
+    toks = jax.device_get(toks)
+    assert toks.shape == (pool,)
+    assert toks.dtype == np.int32
+    assert all(0 <= int(t) < cfg.vocab_size for t in toks)
+
+
 # --------------------------------------------------- decode-fn LRU cache
 def test_decode_cache_lru_bounded(small_model, monkeypatch):
     from collections import OrderedDict
