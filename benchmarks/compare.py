@@ -137,6 +137,26 @@ def compare(
                     base, cur,
                 ))
 
+        elif name == "train_step/kernels":
+            b = _derived_int(base, "stitched")
+            f = _derived_int(cur, "stitched")
+            if b is not None and f is not None and f > b:
+                failures.append(_fail_msg(
+                    name, "stitched",
+                    f"stitched train-step kernel count regressed {b} -> {f}",
+                    base, cur,
+                ))
+
+        elif name == "control_flow/decode_loop/replay":
+            b = _derived_int(base, "traced")
+            f = _derived_int(cur, "traced")
+            if b is not None and f is not None and f > b:
+                failures.append(_fail_msg(
+                    name, "traced",
+                    f"decode-loop traced dispatch count regressed {b} -> {f}",
+                    base, cur,
+                ))
+
         elif name == "serve_runtime/prefill_launches":
             b = _derived_int(base, "chunked")
             f = _derived_int(cur, "chunked")
@@ -239,6 +259,63 @@ def compare(
                     name, "hand/stitched",
                     f"jaxpr frontend emits {fs} kernels vs the hand-built "
                     f"plan's {fh} (lowering drifted from parity)",
+                    cur, cur,
+                ))
+
+    # control-flow/grad capture invariants (ISSUE 8 acceptance) are checked
+    # WITHIN each fresh row, independent of the baseline: zero fallbacks,
+    # fewer launches than unfused, bitwise loss parity, and a traced replay
+    # that beats the eager per-step loop are the contract, not drift
+    for name, cur in sorted(fresh.items()):
+        if name == "train_step/kernels":
+            fb = _derived_int(cur, "fallbacks")
+            if fb is not None and fb > 0:
+                failures.append(_fail_msg(
+                    name, "fallbacks",
+                    f"train step fell back to plain jax.jit {fb} time(s) — "
+                    f"forward+backward+optimizer must compile as one plan",
+                    cur, cur,
+                ))
+            fs = _derived_int(cur, "stitched")
+            fu = _derived_int(cur, "unfused")
+            if fs is not None and fu is not None and fs >= fu:
+                failures.append(_fail_msg(
+                    name, "stitched/unfused",
+                    f"stitched train step launches {fs} kernels, not fewer "
+                    f"than the unfused baseline's {fu}",
+                    cur, cur,
+                ))
+        elif name == "train_step/loss_parity":
+            bw = _derived_int(cur, "bitwise")
+            if bw is not None and bw != 1:
+                failures.append(_fail_msg(
+                    name, "bitwise",
+                    "stitched train-step loss trajectory is not bit-identical "
+                    "to jax.jit",
+                    cur, cur,
+                ))
+        elif name == "control_flow/decode_loop/replay":
+            fb = _derived_int(cur, "fallbacks")
+            if fb is not None and fb > 0:
+                failures.append(_fail_msg(
+                    name, "fallbacks",
+                    f"scan decode loop fell back to plain jax.jit {fb} time(s)",
+                    cur, cur,
+                ))
+            ft = _derived_int(cur, "traced")
+            fe = _derived_int(cur, "eager")
+            if ft is not None and fe is not None and ft >= fe:
+                failures.append(_fail_msg(
+                    name, "traced/eager",
+                    f"traced replay dispatches {ft} per call, not fewer than "
+                    f"the eager loop's {fe}",
+                    cur, cur,
+                ))
+            pa = _derived_int(cur, "parity")
+            if pa is not None and pa != 1:
+                failures.append(_fail_msg(
+                    name, "parity",
+                    "decode-loop output is not bit-identical to jax.jit",
                     cur, cur,
                 ))
 

@@ -115,13 +115,15 @@ def main():
 
     # -- unsupported primitives --------------------------------------------
     try:
-        stitch(lambda t: jnp.sin(t))(x)
+        stitch(lambda t: jnp.cumsum(t, axis=-1))(x)
         raise AssertionError("expected UnsupportedPrimitiveError")
     except UnsupportedPrimitiveError as e:
         print(f"unsupported     : named error for '{e.primitive}' ✓")
-    fb = stitch(lambda t: jnp.sin(t) + 1.0, on_unsupported="fallback")
+    fb = stitch(
+        lambda t: jnp.cumsum(t, axis=-1) + 1.0, on_unsupported="fallback"
+    )
     np.testing.assert_allclose(
-        np.asarray(fb(x)), np.sin(x) + 1.0, rtol=1e-5, atol=1e-5
+        np.asarray(fb(x)), np.cumsum(x, axis=-1) + 1.0, rtol=1e-5, atol=1e-5
     )
     print(f"fallback        : {fb.num_fallbacks} signature(s) via plain "
           f"jax.jit ✓")

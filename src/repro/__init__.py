@@ -2,47 +2,102 @@
 JAX/Pallas TPU framework: stitching compiler core, stitched kernels, model
 zoo, distributed training/serving substrate, multi-pod launch tooling.
 
-Public surface:
+Public surface (one coherent top level):
 
   * ``repro.stitch`` — the jit-shaped frontend: capture a real ``jax.numpy``
-    function into StitchIR and compile it through the stitching pipeline
-    (``StitchedFunction``, ``UnsupportedPrimitiveError``).
+    function (control flow and gradients included) into StitchIR and compile
+    it through the stitching pipeline.  ``static_argnums`` /
+    ``static_argnames`` / ``donate_argnums`` mirror ``jax.jit``; the
+    returned ``StitchedFunction`` exposes ``.lower()`` -> ``Lowered`` for
+    introspection (``.as_text()``, ``.num_kernels``, ``.cost_estimate()``).
   * ``repro.StitchOptions`` — compile options (planner, budgets, stitching).
-  * ``repro.compile_module`` / ``repro.trace`` / ``repro.GraphBuilder`` —
-    the documented low-level path for hand-built StitchIR.
+  * ``repro.compile_module`` — the documented low-level path for hand-built
+    StitchIR modules.
+  * ``repro.ServeEngine`` / ``repro.PagedServeEngine`` — continuous-batching
+    serve engines behind the shared ``repro.BaseEngine`` protocol
+    (``admit`` / ``tick`` / ``run_until_done`` / ``stats``).
+
+Lower-level names (``GraphBuilder``, ``trace``, ``lower_jaxpr``,
+``reference_execute``, primitive tables) now live in ``repro.core`` and
+``repro.frontend``; importing them from ``repro`` still works but emits a
+one-time ``DeprecationWarning`` naming the new home.
 """
-__version__ = "1.1.0"
+import warnings as _warnings
+
+__version__ = "1.2.0"
 
 from .core import (  # noqa: F401
     CompiledModule,
     CompileStats,
-    GraphBuilder,
     Module,
     StitchOptions,
     compile_module,
-    reference_execute,
-    trace,
 )
 from .frontend import (  # noqa: F401
-    SUPPORTED_PRIMITIVES,
+    CostEstimate,
+    Lowered,
     StitchedFunction,
     UnsupportedPrimitiveError,
-    lower_jaxpr,
     stitch,
+)
+from .serve import (  # noqa: F401
+    BaseEngine,
+    PagedServeEngine,
+    Request,
+    ServeEngine,
 )
 
 __all__ = [
+    # frontend
     "stitch",
     "StitchOptions",
     "StitchedFunction",
+    "Lowered",
+    "CostEstimate",
     "UnsupportedPrimitiveError",
-    "SUPPORTED_PRIMITIVES",
-    "lower_jaxpr",
+    # compiler core
     "CompiledModule",
     "CompileStats",
-    "GraphBuilder",
     "Module",
     "compile_module",
-    "reference_execute",
-    "trace",
+    # serving
+    "BaseEngine",
+    "ServeEngine",
+    "PagedServeEngine",
+    "Request",
 ]
+
+# ---------------------------------------------------------------------------
+# Deprecated re-exports: the pre-1.2 flat surface.  Each name resolves to its
+# current home and warns once per process; new code should import from there.
+# ---------------------------------------------------------------------------
+
+_DEPRECATED = {
+    "GraphBuilder": ("repro.core", "GraphBuilder"),
+    "trace": ("repro.core", "trace"),
+    "reference_execute": ("repro.core", "reference_execute"),
+    "lower_jaxpr": ("repro.frontend", "lower_jaxpr"),
+    "SUPPORTED_PRIMITIVES": ("repro.frontend", "SUPPORTED_PRIMITIVES"),
+}
+_warned: set = set()
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:
+        mod_name, attr = _DEPRECATED[name]
+        if name not in _warned:
+            _warned.add(name)
+            _warnings.warn(
+                f"importing {name!r} from 'repro' is deprecated; use "
+                f"'from {mod_name} import {attr}' instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        import importlib
+
+        return getattr(importlib.import_module(mod_name), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(_DEPRECATED) | set(globals()))

@@ -114,6 +114,12 @@ class FusionReport:
     signature: str = ""
     num_phases: int = 1                      # >1 = multi-phase stitched kernel
     interface_bytes: int = 0                 # staged phase-boundary buffers
+    # cost provenance (frontend ``Lowered.cost_estimate``): the analytic
+    # LatencyModel seconds, and the on-device measurement when the tuning
+    # store had (or autotune took) one — ``cost_s`` above is whichever of
+    # the two the planner acted on.
+    model_cost_s: Optional[float] = None
+    measured_cost_s: Optional[float] = None
 
 
 @dataclass
@@ -125,6 +131,14 @@ class CompileStats:
     predicted_time_s: float
     library_time_s: float = 0.0
     reports: List[FusionReport] = field(default_factory=list)
+    # sub-module (loop body) accounting: ``call`` loop sites in the module,
+    # unique bodies compiled (after module-signature dedup), call sites
+    # served by an already-compiled body, and the total kernels inside all
+    # unique bodies (recursive) — fusion_ratio counts them as ours.
+    loop_calls: int = 0
+    sub_compiles: int = 0
+    sub_call_sites: int = 0
+    sub_kernels: int = 0
     # kernel-dedup + pipeline accounting
     kernel_cache_hits: int = 0               # fusion instances served by cache
     kernel_cache_misses: int = 0             # unique fusions tuned this compile
@@ -177,8 +191,10 @@ class CompileStats:
 
     @property
     def fusion_ratio(self) -> float:
-        """paper Fig. 7: our kernel count / XLA baseline kernel count."""
-        ours = self.stitched_kernels + self.standalone_kernels
+        """paper Fig. 7: our kernel count / XLA baseline kernel count.
+        Sub-module (loop body) kernels count as ours — the baseline count
+        recurses into loop bodies the same way."""
+        ours = self.stitched_kernels + self.standalone_kernels + self.sub_kernels
         return ours / self.xla_baseline_kernels if self.xla_baseline_kernels else 1.0
 
     @property
@@ -263,6 +279,8 @@ def build_outputs(state: CompilationState) -> None:
                 signature=p.entry.signature,
                 num_phases=st.num_phases if st is not None else 1,
                 interface_bytes=st.interface_bytes if st is not None else 0,
+                model_cost_s=p.entry.model_cost_s,
+                measured_cost_s=p.entry.measured_cost_s,
             )
         )
 
@@ -274,6 +292,15 @@ def build_outputs(state: CompilationState) -> None:
     )
     library_time = 0.0
     for s in plan.standalone:
+        if s.opcode == "get":
+            continue   # projection of a loop output — no launch, no cost
+        if s.opcode == "call":
+            # a loop costs its body's predicted time per iteration
+            sub = s.attrs["compiled_body"].stats
+            trip = int(s.attrs["trip_count"])
+            predicted += trip * sub.predicted_time_s
+            library_time += trip * sub.library_time_s
+            continue
         # standalone kernels are costed as single-op launches; library-call
         # time (cuBLAS/MXU dots) is tracked separately — it is common to the
         # baseline and the stitched build (paper Fig. 6/8 methodology).
@@ -284,7 +311,9 @@ def build_outputs(state: CompilationState) -> None:
             predicted += t
 
     executable = StitchedExecutable(
-        state.module, plan, kernels, jit_replay=state.options.jit_replay
+        state.module, plan, kernels,
+        jit_replay=state.options.jit_replay,
+        donate_params=state.donate_params,
     )
     st = executable.launch_stats()
     hits = sum(1 for p in state.planned if p.cache_hit)
@@ -293,9 +322,21 @@ def build_outputs(state: CompilationState) -> None:
     unfused = sum(
         1
         for i in state.module.instructions
-        if i.opcode not in ("parameter", "constant")
+        if i.opcode not in ("parameter", "constant", "call", "get")
         and not constant_like(i)
         and not i.is_library_call
+    )
+    # a loop site's no-fusion-at-all launch count is its body's, recursively
+    unfused += sum(
+        i.attrs["compiled_body"].stats.unfused_kernels
+        for i in state.module.instructions
+        if i.opcode == "call"
+    )
+    sub_kernels = sum(
+        cm.stats.stitched_kernels
+        + cm.stats.standalone_kernels
+        + cm.stats.sub_kernels
+        for cm in state.sub_compiled.values()
     )
     pstats = state.fusion_plan.planner
     mstore = state.measured_store
@@ -313,6 +354,10 @@ def build_outputs(state: CompilationState) -> None:
         stitched_kernels=st.stitched_kernels,
         standalone_kernels=st.standalone_kernels,
         library_calls=st.library_calls,
+        loop_calls=st.loop_calls,
+        sub_compiles=len(state.sub_compiled),
+        sub_call_sites=state.sub_call_sites,
+        sub_kernels=sub_kernels,
         xla_baseline_kernels=xla_baseline_kernel_count(state.module),
         predicted_time_s=predicted,
         library_time_s=library_time,
@@ -353,6 +398,7 @@ def compile_module(
     options: Optional[StitchOptions] = None,
     kernel_cache: Optional[KernelCache] = None,
     measured_store=None,
+    donate_params=None,
 ) -> CompiledModule:
     """Compile a StitchIR module through the default pass pipeline.
 
@@ -362,7 +408,9 @@ def compile_module(
     ``core.measure.MeasuredCostStore``) may likewise be shared so autotune
     measurements taken by one compile guide the next; when None, one is
     created if ``options.autotune`` or ``options.tuning_store_path`` asks
-    for it.
+    for it.  ``donate_params`` names parameters whose buffers the caller
+    donates (the frontend's ``donate_argnums``) — runtime-only, never part
+    of any cache fingerprint.
     """
     opts = options or StitchOptions()
     t0 = time.perf_counter()
@@ -387,6 +435,7 @@ def compile_module(
         measured_store=store,
         measured_base_hits=store.hits if store else 0,
         measured_base_misses=store.misses if store else 0,
+        donate_params=frozenset(donate_params) if donate_params else None,
     )
     default_pipeline().run(state)
     state.stats.compile_time_s = time.perf_counter() - t0

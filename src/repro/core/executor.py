@@ -66,6 +66,7 @@ class LaunchStats:
     stitched_kernels: int = 0
     standalone_kernels: int = 0
     library_calls: int = 0
+    loop_calls: int = 0              # sub-module loops (``call`` instructions)
     # runtime replay accounting: how calls were dispatched so far
     traced_calls: int = 0            # calls through the jitted replay
     eager_calls: int = 0             # calls through the eager step loop
@@ -141,6 +142,128 @@ class _OpStep:
         self.arg_slots = arg_slots
         self.out_slot = out_slot
         self.release: List[int] = []
+
+
+def _step_outs(step) -> List[int]:
+    """Buffer slots a pre-bound step writes."""
+    if type(step) is _OpStep:
+        return [step.out_slot]
+    return step.out_slots
+
+
+class _LoopStep:
+    """One sub-module loop (``call`` instruction), pre-bound.
+
+    The body is a separately compiled ``ExecutionPlan`` whose step loop is
+    inlined AT TRACE TIME via ``ExecutionPlan.trace_steps`` — same kernels,
+    same step order, same barriers in every replay mode.  The eager path
+    dispatches one jitted body call per iteration (``trip`` dispatches —
+    exactly the per-iteration launch overhead the paper's decode loops
+    pay); the traced path wraps the same inlined body in one
+    ``jax.lax.scan`` under a single jit, so the whole loop costs ONE
+    dispatch.  Carries double-buffer through the scan carry; per-iteration
+    outputs stack into the planned output slots.
+    """
+
+    __slots__ = (
+        "instr", "body_plan", "arg_slots", "out_slots", "out_indices",
+        "release", "num_consts", "num_carry", "trip", "reverse",
+        "out_order", "out_shapes", "out_dtypes", "_iter_fn", "_scan_fn",
+    )
+
+    def __init__(self, instr: Instruction, body_plan, arg_slots, out_slots,
+                 out_indices):
+        a = instr.attrs
+        self.instr = instr
+        self.body_plan = body_plan
+        self.arg_slots = arg_slots
+        self.out_slots = out_slots        # one per live ``get`` projection
+        self.out_indices = list(out_indices)   # logical output index per slot
+        self.release: List[int] = []
+        self.num_consts = int(a["num_consts"])
+        self.num_carry = int(a["num_carry"])
+        self.trip = int(a["trip_count"])
+        self.reverse = bool(a.get("reverse", False))
+        self.out_order = list(a["out_order"])
+        self.out_shapes = [tuple(s) for s in a["out_shapes"]]
+        self.out_dtypes = list(a["out_dtypes"])
+        self._iter_fn = None              # per-iteration jit (eager replay)
+        self._scan_fn = None              # whole-loop jit (traced replay)
+
+    # -- trace-time body --------------------------------------------------
+    def _scan(self, args):
+        """All logical outputs (final carries + stacked ys), traceable."""
+        nc, k = self.num_consts, self.num_carry
+        consts = list(args[:nc])
+        init = list(args[nc:nc + k])
+        xs = list(args[nc + k:])
+        plan, order = self.body_plan, self.out_order
+
+        def body(carry, x):
+            x_vals = [] if x is None else list(x)
+            roots = plan.trace_steps(consts + list(carry) + x_vals)
+            ordered = [roots[j] for j in order]
+            return tuple(ordered[:k]), tuple(ordered[k:])
+
+        final, ys = jax.lax.scan(
+            body,
+            tuple(init),
+            tuple(xs) if xs else None,
+            length=self.trip,
+            reverse=self.reverse,
+        )
+        return list(final) + list(ys)
+
+    def run_nested(self, args):
+        """Inline into an enclosing trace (nested loops): the projected
+        output values for this step's ``out_slots``."""
+        outs = self._scan(list(args))
+        return [outs[i] for i in self.out_indices]
+
+    # -- replay modes -----------------------------------------------------
+    def run_traced(self, args, counter):
+        if self._scan_fn is None:
+            def fn(*vals):
+                counter()             # runs only while tracing
+                return tuple(self.run_nested(list(vals)))
+
+            self._scan_fn = jax.jit(fn)
+        return self._scan_fn(*args)
+
+    def run_eager(self, args):
+        nc, k = self.num_consts, self.num_carry
+        consts = list(args[:nc])
+        carry = list(args[nc:nc + k])
+        xs = list(args[nc + k:])
+        n_y = len(self.out_order) - k
+        if self.trip == 0:
+            all_outs = carry + [
+                jnp.zeros(self.out_shapes[k + j], self.out_dtypes[k + j])
+                for j in range(n_y)
+            ]
+            return [all_outs[i] for i in self.out_indices]
+        if self._iter_fn is None:
+            plan, order = self.body_plan, self.out_order
+
+            def it(*vals):
+                roots = plan.trace_steps(list(vals))
+                return tuple(roots[j] for j in order)
+
+            self._iter_fn = jax.jit(it)
+        cols: List[List[object]] = [[] for _ in range(n_y)]
+        steps = (
+            range(self.trip - 1, -1, -1) if self.reverse
+            else range(self.trip)
+        )
+        for t in steps:
+            outs = self._iter_fn(*(consts + carry + [x[t] for x in xs]))
+            carry = list(outs[:k])
+            for j in range(n_y):
+                cols[j].append(outs[k + j])
+        if self.reverse:
+            cols = [list(reversed(c)) for c in cols]
+        all_outs = carry + [jnp.stack(c) for c in cols]
+        return [all_outs[i] for i in self.out_indices]
 
 
 class _JitSegment:
@@ -235,6 +358,7 @@ class ExecutionPlan:
         module: Module,
         plan: FusionPlan,
         kernels: Dict[str, StitchedKernel],
+        donate_params=None,
     ):
         member_ids = {m.id for f in plan.fusions for m in f.members}
         covered = member_ids | {s.id for s in plan.standalone}
@@ -287,8 +411,36 @@ class ExecutionPlan:
         self.steps: List[object] = []
         for u in units:
             if isinstance(u, Instruction):
+                if u.opcode == "get":
+                    continue   # its slot is created by the call's loop step
                 arg_slots = [slot_of[o.id] for o in u.operands]
-                self.steps.append(_OpStep(u, arg_slots, new_slot(u.id)))
+                if u.opcode == "call":
+                    gets = sorted(
+                        (g for g in u.users if g.opcode == "get"),
+                        key=lambda g: g.attrs["index"],
+                    )
+                    if len(gets) != len(u.users):
+                        raise RuntimeError(
+                            f"{u.name}: call outputs must be consumed "
+                            "through get projections"
+                        )
+                    cm = u.attrs.get("compiled_body")
+                    if cm is None:
+                        raise RuntimeError(
+                            f"{u.name}: loop body was not compiled — "
+                            "SubModulePass must run before plan construction"
+                        )
+                    self.steps.append(
+                        _LoopStep(
+                            u,
+                            cm.executable.execution_plan,
+                            arg_slots,
+                            [new_slot(g.id) for g in gets],
+                            [int(g.attrs["index"]) for g in gets],
+                        )
+                    )
+                else:
+                    self.steps.append(_OpStep(u, arg_slots, new_slot(u.id)))
             else:
                 k = kernels[u.name]
                 arg_slots = [slot_of[i.id] for i in k.inputs]
@@ -314,10 +466,7 @@ class ExecutionPlan:
         # they would hold their buffer for the whole run.  Release them at
         # the step that produces them.
         for si, step in enumerate(self.steps):
-            outs = (
-                step.out_slots if type(step) is _KernelStep else [step.out_slot]
-            )
-            for s in outs:
+            for s in _step_outs(step):
                 if s not in keep and s not in last_read:
                     step.release.append(s)
 
@@ -335,33 +484,93 @@ class ExecutionPlan:
         # (e.g. a transpose) into the dot operand and changes the
         # accumulation order, breaking bit-parity with the eager oracle.
         # Template + parameter slots are protected from donation (shared
-        # across calls / possibly still held by the caller).
+        # across calls / possibly still held by the caller) — EXCEPT
+        # parameters the caller explicitly donated (``donate_argnums``
+        # through the frontend): those buffers belong to the plan after the
+        # call, per the jax.jit donation contract.
+        donate = frozenset(donate_params or ())
         protected_slots = {s for s, _ in template_fill} | {
-            slot for _, slot, _, _ in self._param_binds
+            slot for name, slot, _, _ in self._param_binds
+            if name not in donate
         }
-        self._segments: List[_JitSegment] = []
+        self.donated_param_slots = {
+            slot for name, slot, _, _ in self._param_binds if name in donate
+        }
+        self._segments: List[object] = []
         run: List[object] = []
         produced: set = set()
         for step in self.steps:
+            if type(step) is _LoopStep:
+                # a loop is its own dispatch unit in the traced replay
+                if run:
+                    self._segments.append(
+                        _JitSegment(run, keep, protected_slots)
+                    )
+                    run, produced = [], set()
+                self._segments.append(step)
+                continue
             is_lib = type(step) is _OpStep and step.instr.is_library_call
             if is_lib and run and any(s in produced for s in step.arg_slots):
                 self._segments.append(_JitSegment(run, keep, protected_slots))
                 run, produced = [], set()
             run.append(step)
-            produced.update(
-                step.out_slots if type(step) is _KernelStep else [step.out_slot]
-            )
+            produced.update(_step_outs(step))
         if run:
             self._segments.append(_JitSegment(run, keep, protected_slots))
         self.stats = LaunchStats(
-            eager_dispatches_per_call=len(self.steps),
+            eager_dispatches_per_call=sum(
+                s.trip if type(s) is _LoopStep else 1 for s in self.steps
+            ),
             traced_dispatches_per_call=len(self._segments),
-            donated_buffers=sum(len(seg.donate) for seg in self._segments),
+            donated_buffers=sum(
+                len(seg.donate) for seg in self._segments
+                if type(seg) is _JitSegment
+            ),
+            loop_calls=sum(
+                1 for s in self.steps if type(s) is _LoopStep
+            ),
         )
 
     @property
     def num_folded(self) -> int:
         return sum(1 for v in self._template if v is not None)
+
+    def trace_steps(self, param_vals) -> List[object]:
+        """Trace-time inline of the whole pre-bound step loop, WITHOUT
+        segmentation: this is the loop-body building block (``_LoopStep``),
+        where the surrounding per-iteration jit / ``lax.scan`` is the
+        dispatch unit.  Parameter values pass through
+        ``optimization_barrier`` so library dots see canonical operands
+        whether the body runs standalone (eager per-iteration jit) or
+        inside ``lax.scan`` — XLA cannot fold carried-value or slice
+        layouts into the dot and change its accumulation order, which
+        keeps the two replay modes bit-identical.  Takes parameter values
+        positionally (``_param_binds`` order = parameter creation order =
+        call operand order) and returns root values in ``module.roots``
+        order."""
+        buf: List[Optional[object]] = list(self._template)
+        for (name, slot, dtype, shape), v in zip(
+            self._param_binds, param_vals
+        ):
+            buf[slot] = jax.lax.optimization_barrier(
+                jnp.asarray(v, dtype=dtype)
+            )
+        for step in self.steps:
+            args = [buf[s] for s in step.arg_slots]
+            if type(step) is _KernelStep:
+                outs = jax.lax.optimization_barrier(step.kernel(*args))
+                for s, o in zip(step.out_slots, outs):
+                    buf[s] = o
+            elif type(step) is _LoopStep:
+                for s, o in zip(step.out_slots, step.run_nested(args)):
+                    buf[s] = o
+            else:
+                buf[step.out_slot] = jax.lax.optimization_barrier(
+                    apply_op(step.instr, *args)
+                )
+            for s in step.release:
+                buf[s] = None
+        return [buf[s] for _, s in self._root_binds]
 
     def _bind_feeds(self, feeds: Dict[str, object]) -> List[object]:
         """Validated parameter values in ``_param_binds`` order."""
@@ -386,6 +595,10 @@ class ExecutionPlan:
         for step in self.steps:
             if type(step) is _KernelStep:
                 outs = step.kernel(*[buf[s] for s in step.arg_slots])
+                for s, o in zip(step.out_slots, outs):
+                    buf[s] = o
+            elif type(step) is _LoopStep:
+                outs = step.run_eager([buf[s] for s in step.arg_slots])
                 for s, o in zip(step.out_slots, outs):
                     buf[s] = o
             else:
@@ -422,6 +635,15 @@ class ExecutionPlan:
                 "ignore", message="Some donated buffers were not usable"
             )
             for seg in self._segments:
+                if type(seg) is _LoopStep:
+                    outs = seg.run_traced(
+                        [buf[s] for s in seg.arg_slots], self._count_trace
+                    )
+                    for s, o in zip(seg.out_slots, outs):
+                        buf[s] = o
+                    for s in seg.release:
+                        buf[s] = None
+                    continue
                 if seg.fn is None:
                     seg.build(self._count_trace)
                 outs = seg.fn(*[buf[s] for s in seg.in_slots])
@@ -447,21 +669,26 @@ class StitchedExecutable:
         plan: FusionPlan,
         kernels: Dict[str, StitchedKernel],  # fusion name -> kernel
         jit_replay: bool = True,
+        donate_params=None,
     ):
         self.module = module
         self.plan = plan
         self.kernels = kernels
         self.jit_replay = jit_replay
-        self.execution_plan = ExecutionPlan(module, plan, kernels)
+        self.execution_plan = ExecutionPlan(
+            module, plan, kernels, donate_params=donate_params
+        )
 
     def launch_stats(self) -> LaunchStats:
         st = LaunchStats()
         st.stitched_kernels = len(self.plan.fusions)
         st.standalone_kernels = sum(
-            1 for s in self.plan.standalone if not s.is_library_call
+            1 for s in self.plan.standalone
+            if not s.is_library_call and s.opcode not in ("call", "get")
         )
         st.library_calls = self.plan.num_library_calls
         rt = self.execution_plan.stats
+        st.loop_calls = rt.loop_calls
         st.traced_calls = rt.traced_calls
         st.eager_calls = rt.eager_calls
         st.jit_traces = rt.jit_traces

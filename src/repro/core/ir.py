@@ -44,6 +44,8 @@ ELEMENTWISE_UNARY: Dict[str, Callable] = {
     "gelu": jax.nn.gelu,
     "square": jnp.square,
     "reciprocal": lambda x: 1.0 / x,
+    "cos": jnp.cos,
+    "sin": jnp.sin,
 }
 
 ELEMENTWISE_BINARY: Dict[str, Callable] = {
@@ -69,7 +71,7 @@ ELEMENTWISE_BINARY: Dict[str, Callable] = {
 EXPENSIVE_ELEMENTWISE = frozenset(
     {
         "exp", "log", "div", "tanh", "sqrt", "rsqrt", "sigmoid", "softplus",
-        "pow", "silu", "gelu", "reciprocal",
+        "pow", "silu", "gelu", "reciprocal", "cos", "sin",
     }
 )
 
@@ -156,7 +158,17 @@ class Instruction:
 
     def __repr__(self):
         ops = ", ".join(o.name for o in self.operands)
-        return f"%{self.name}: {np.dtype(self.dtype).name}{list(self.shape)} = {self.opcode}({ops}) {self.attrs or ''}"
+        attrs = self.attrs
+        if self.opcode == "call":
+            # the body Module (and its compiled form) would render multiline
+            attrs = {
+                "kind": attrs.get("kind"),
+                "body": getattr(attrs.get("body"), "name", None),
+                "trip_count": attrs.get("trip_count"),
+                "num_carry": attrs.get("num_carry"),
+                "reverse": attrs.get("reverse"),
+            }
+        return f"%{self.name}: {np.dtype(self.dtype).name}{list(self.shape)} = {self.opcode}({ops}) {attrs or ''}"
 
 
 # --------------------------------------------------------------------------
@@ -222,6 +234,8 @@ def _infer_checked(instr: Instruction) -> None:
 def infer_shape(opcode, operand_shapes, attrs) -> Optional[Tuple[int, ...]]:
     if opcode in ("parameter", "constant", "iota"):
         return None  # shape is intrinsic
+    if opcode in ("call", "get"):
+        return None  # multi-output loop call / projection: shapes in attrs
     if opcode == "elementwise":
         return tuple(operand_shapes[0])
     if opcode == "select":
@@ -312,7 +326,65 @@ def apply_op(instr: Instruction, *vals, shape_override: Optional[Tuple[int, ...]
         return jax.lax.broadcasted_iota(instr.dtype, shape, a["dim"])
     if op == "constant":
         return jnp.asarray(a["value"], dtype=instr.dtype)
+    if op == "call":
+        return _apply_call(instr, vals)
+    if op == "get":
+        return vals[0][a["index"]]
     raise ValueError(f"cannot apply {op}")
+
+
+def _interpret_module(module: "Module", feeds_by_order: Sequence) -> List:
+    """Reference walk of a (loop-body) module with parameter values given
+    positionally in parameter-creation order; returns root values in
+    ``module.roots`` order.  Kept here (not ``executor.reference_execute``)
+    so ``apply_op`` stays self-contained for the oracle."""
+    vals: Dict[int, object] = {}
+    params = iter(feeds_by_order)
+    for instr in module.instructions:
+        if instr.opcode == "parameter":
+            vals[instr.id] = jnp.asarray(next(params), dtype=instr.dtype)
+        else:
+            vals[instr.id] = apply_op(
+                instr, *[vals[o.id] for o in instr.operands]
+            )
+    return [vals[r.id] for r in module.roots]
+
+
+def _apply_call(instr: Instruction, vals) -> Tuple:
+    """Reference semantics of a ``call`` loop: run the body module
+    ``trip_count`` times threading carries, stack the per-iteration outputs.
+    Returns ALL logical outputs ``(carries..., stacked ys...)`` — ``get``
+    projects one of them."""
+    a = instr.attrs
+    body: "Module" = a["body"]
+    nc, k = int(a["num_consts"]), int(a["num_carry"])
+    trip = int(a["trip_count"])
+    reverse = bool(a.get("reverse", False))
+    out_order = list(a["out_order"])           # logical output -> root pos
+    consts = list(vals[:nc])
+    carry = list(vals[nc:nc + k])
+    xs = list(vals[nc + k:])
+    n_y = len(out_order) - k
+    ys: List[List] = [[] for _ in range(n_y)]
+    steps = range(trip - 1, -1, -1) if reverse else range(trip)
+    for t in steps:
+        roots = _interpret_module(
+            body, consts + carry + [x[t] for x in xs]
+        )
+        ordered = [roots[j] for j in out_order]
+        carry = ordered[:k]
+        for j in range(n_y):
+            ys[j].append(ordered[k + j])
+    if reverse:
+        ys = [list(reversed(col)) for col in ys]
+    stacked = []
+    for j in range(n_y):
+        if ys[j]:
+            stacked.append(jnp.stack(ys[j]))
+        else:  # zero-trip loop: empty stacked output
+            shape = tuple(a["out_shapes"][k + j])
+            stacked.append(jnp.zeros(shape, dtype=a["out_dtypes"][k + j]))
+    return tuple(carry + stacked)
 
 
 # --------------------------------------------------------------------------
@@ -492,6 +564,52 @@ class GraphBuilder:
 
     def iota(self, shape, dim=0, dtype=jnp.float32) -> Tensor:
         return self._emit("iota", shape, dtype, [], {"dim": dim})
+
+    def call_loop(
+        self,
+        operands: Sequence[Tensor],
+        body: Module,
+        *,
+        trip_count: int,
+        num_consts: int,
+        num_carry: int,
+        out_order: Sequence[int],
+        out_shapes: Sequence[Tuple[int, ...]],
+        out_dtypes: Sequence[str],
+        reverse: bool = False,
+        kind: str = "scan",
+    ) -> Tensor:
+        """A sub-module loop (``lax.scan`` analogue): run ``body``
+        ``trip_count`` times.  Operands are ``consts + init_carries +
+        stacked xs`` and bind positionally to the body's parameters (in
+        creation order).  The instruction's logical outputs are
+        ``(final carries..., stacked ys...)``; ``out_order[j]`` locates
+        logical output ``j`` among ``body.roots`` (names never enter the
+        contract, so structurally identical bodies share compiled plans).
+        Project outputs with ``get``."""
+        attrs = {
+            "kind": kind,
+            "body": body,
+            "trip_count": int(trip_count),
+            "num_consts": int(num_consts),
+            "num_carry": int(num_carry),
+            "reverse": bool(reverse),
+            "out_order": tuple(int(j) for j in out_order),
+            "out_shapes": tuple(tuple(int(s) for s in sh) for sh in out_shapes),
+            "out_dtypes": tuple(str(np.dtype(d)) for d in out_dtypes),
+        }
+        return self._emit(
+            "call", attrs["out_shapes"][0], attrs["out_dtypes"][0],
+            list(operands), attrs,
+        )
+
+    def get(self, call: Tensor, index: int) -> Tensor:
+        """Project logical output ``index`` of a ``call`` loop."""
+        a = call.instr.attrs
+        return self._emit(
+            "get", a["out_shapes"][index], a["out_dtypes"][index],
+            [call], {"index": int(index)},
+        )
 
     # -- named math sugar ---------------------------------------------------
     def exp(self, x): return self.unary("exp", x)

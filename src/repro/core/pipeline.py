@@ -88,6 +88,16 @@ class CompilationState:
     measured_base_hits: int = 0
     measured_base_misses: int = 0
     measurements_taken: int = 0
+    # Parameter names whose buffers the caller donated (frontend
+    # ``donate_argnums``): threaded to the ExecutionPlan, which lifts the
+    # donation protection on those slots.  Runtime-only — never part of any
+    # cache fingerprint (like ``jit_replay``, it changes how a plan is
+    # replayed, not what is tuned or emitted).
+    donate_params: Optional[frozenset] = None
+    # Sub-module (loop body) compiles, filled by SubModulePass: unique
+    # compiled bodies by structural module signature, plus call-site count.
+    sub_compiled: Dict[str, object] = field(default_factory=dict)
+    sub_call_sites: int = 0
     # filled by FinalizePass
     executable: Optional[object] = None
     stats: Optional[object] = None
@@ -115,6 +125,45 @@ class PassPipeline:
 # --------------------------------------------------------------------------
 # Passes
 # --------------------------------------------------------------------------
+
+
+class SubModulePass(Pass):
+    """Compile every loop body (``call`` instruction) as its own module
+    through the full pipeline, BEFORE the parent's fusion pass runs.
+
+    Bodies are deduplicated by structural ``module_signature``: the N
+    scan layers of a stacked model lower to N ``call`` sites whose bodies
+    hash equal, so one compiled sub-module serves them all.  The parent's
+    ``kernel_cache`` and ``measured_store`` are shared into the sub-compile,
+    so structurally identical fusions inside different (or repeated) bodies
+    also dedup at the kernel level across layers and across compiles.
+    Idempotent — a ``call`` that already carries a ``compiled_body`` is
+    left alone; nested loops recurse naturally because the sub-compile runs
+    this same pipeline.
+    """
+
+    name = "submodule"
+
+    def run(self, state: CompilationState) -> None:
+        from .compiler import compile_module
+        from .signature import module_signature
+
+        for instr in state.module.instructions:
+            if instr.opcode != "call" or "compiled_body" in instr.attrs:
+                continue
+            state.sub_call_sites += 1
+            sig = module_signature(instr.attrs["body"])
+            cm = state.sub_compiled.get(sig)
+            if cm is None:
+                cm = compile_module(
+                    instr.attrs["body"],
+                    state.options,
+                    kernel_cache=state.kernel_cache,
+                    measured_store=state.measured_store,
+                )
+                state.sub_compiled[sig] = cm
+            instr.attrs["compiled_body"] = cm
+            instr.attrs["body_sig"] = sig
 
 
 class FusionPass(Pass):
@@ -568,6 +617,7 @@ class FinalizePass(Pass):
 def default_pipeline() -> PassPipeline:
     return PassPipeline(
         [
+            SubModulePass(),
             FusionPass(),
             SchedulePass(),
             MemoryPass(),

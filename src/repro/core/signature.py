@@ -91,6 +91,43 @@ def fusion_signature(fusion: FusedComputation) -> str:
     return hashlib.sha256(repr(feats).encode()).hexdigest()
 
 
+def module_signature(module) -> str:
+    """Content hash of a whole module's structure — opcode/shape/dtype/attrs
+    and operand wiring in instruction order, plus parameter arity and root
+    positions.  Instruction ids and *names* never enter the hash, so two
+    loop bodies lowered from structurally identical jaxprs (stacked scan
+    layers) hash equal and share one compiled sub-module
+    (``pipeline.SubModulePass``).  Nested ``call`` bodies hash recursively;
+    their ``body``/``compiled_body`` attrs (unstable object reprs) are
+    replaced by the recursive signature."""
+    pos: Dict[int, int] = {}
+    feats: List = []
+    n_params = 0
+    for k, instr in enumerate(module.instructions):
+        pos[instr.id] = k
+        attrs = instr.attrs
+        if instr.opcode == "call":
+            attrs = {
+                key: v for key, v in attrs.items()
+                if key not in ("body", "compiled_body", "body_sig")
+            }
+            attrs["body_sig"] = module_signature(instr.attrs["body"])
+        if instr.opcode == "parameter":
+            n_params += 1
+        feats.append(
+            (
+                instr.opcode,
+                tuple(instr.shape),
+                str(np.dtype(instr.dtype)),
+                _canon_attrs(attrs),
+                tuple(pos[o.id] for o in instr.operands),
+            )
+        )
+    feats.append(("params", n_params))
+    feats.append(("roots", tuple(pos[r.id] for r in module.roots)))
+    return hashlib.sha256(repr(feats).encode()).hexdigest()
+
+
 @dataclass
 class CacheEntry:
     """One unique fusion structure: its tuned schedule, memory plan, and the

@@ -69,10 +69,23 @@ def xla_baseline_kernels(module: Module) -> List[Instruction]:
 
 
 def xla_baseline_kernel_count(module: Module, exclude_library: bool = True) -> int:
-    roots = xla_baseline_kernels(module)
-    if exclude_library:
-        return sum(1 for r in roots if not r.is_library_call)
-    return len(roots)
+    """``get`` projections are free (they name one output of a loop call);
+    a ``call`` loop counts as its body's baseline kernels — XLA compiles a
+    ``while``/``scan`` body once into its own kernels (launched per
+    iteration, but Fig. 7 compares kernel *counts*, not launches)."""
+    total = 0
+    for r in xla_baseline_kernels(module):
+        if r.opcode == "get":
+            continue
+        if r.opcode == "call":
+            total += xla_baseline_kernel_count(
+                r.attrs["body"], exclude_library
+            )
+            continue
+        if exclude_library and r.is_library_call:
+            continue
+        total += 1
+    return total
 
 
 def xla_baseline_groups(module: Module) -> Dict[int, List[Instruction]]:

@@ -4,7 +4,7 @@
 ``lower_jaxpr`` is the jaxpr -> StitchIR lowering it drives (see
 ``jaxpr_lower``).
 """
-from .api import StitchedFunction, stitch
+from .api import CostEstimate, Lowered, StitchedFunction, stitch
 from .jaxpr_lower import (
     BINARY_PRIMS,
     CALL_PRIMS,
@@ -21,6 +21,8 @@ from .jaxpr_lower import (
 __all__ = [
     "StitchedFunction",
     "stitch",
+    "Lowered",
+    "CostEstimate",
     "LoweredJaxpr",
     "UnsupportedPrimitiveError",
     "lower_jaxpr",

@@ -59,11 +59,14 @@ UNARY_PRIMS: Dict[str, str] = {
     "floor": "floor",
     "logistic": "sigmoid",
     "not": "not",
+    "cos": "cos",
+    "sin": "sin",
 }
 
 #: jaxpr binary primitive -> StitchIR elementwise fn
 BINARY_PRIMS: Dict[str, str] = {
     "add": "add",
+    "add_any": "add",   # transpose-rule accumulation (jax.grad cotangents)
     "sub": "sub",
     "mul": "mul",
     "div": "div",
@@ -104,12 +107,19 @@ CALL_PRIMS = frozenset(
 STRUCTURAL_PRIMS = frozenset(
     {"dot_general", "broadcast_in_dim", "transpose", "reshape", "squeeze",
      "convert_element_type", "select_n", "integer_pow", "concatenate",
-     "iota", "square"}
+     "iota", "square", "clamp"}
 )
+
+#: control-flow primitives: ``scan`` lowers to a sub-module ``call`` loop
+#: (``fori_loop`` over static Python-int bounds lowers to ``scan`` inside
+#: jax, so it arrives here as one); ``while`` lowers the same way when a
+#: static trip count is provable from the canonical counter pattern;
+#: ``cond`` inlines both branches behind ``select``.
+CONTROL_FLOW_PRIMS = frozenset({"scan", "while", "cond"})
 
 SUPPORTED_PRIMITIVES = frozenset(
     set(UNARY_PRIMS) | set(BINARY_PRIMS) | set(REDUCE_PRIMS)
-    | IDENTITY_PRIMS | CALL_PRIMS | STRUCTURAL_PRIMS
+    | IDENTITY_PRIMS | CALL_PRIMS | STRUCTURAL_PRIMS | CONTROL_FLOW_PRIMS
 )
 
 
@@ -189,6 +199,11 @@ class _Lowerer:
     def __init__(self, builder: GraphBuilder, fuse_dot: bool):
         self.b = builder
         self.fuse_dot = fuse_dot
+        #: live vars of the jaxpr currently being lowered (set by
+        #: ``lower_jaxpr`` / saved+restored around inlined sub-jaxprs);
+        #: multi-output eqns consult it so dead outputs never become
+        #: user-less instructions (= accidental module roots).
+        self.live: set = set()
 
     # -- environment ------------------------------------------------------
     def read(self, env: Dict, atom) -> Tensor:
@@ -220,6 +235,15 @@ class _Lowerer:
         if prim in CALL_PRIMS:
             self._inline_call(env, eqn)
             return
+        if prim == "scan":
+            self._lower_scan(env, eqn)
+            return
+        if prim == "while":
+            self._lower_while(env, eqn)
+            return
+        if prim == "cond":
+            self._lower_cond(env, eqn)
+            return
         outs = self._lower_value_eqn(env, eqn)
         for var, t in zip(eqn.outvars, outs):
             if not _is_dropvar(var):
@@ -246,7 +270,7 @@ class _Lowerer:
             )
         live_outs = [
             iv for ov, iv in zip(eqn.outvars, inner.outvars)
-            if not _is_dropvar(ov)
+            if not _is_dropvar(ov) and ov in self.live
         ]
         kept, live = _live_eqns(inner.eqns, live_outs)
         sub_env: Dict = {}
@@ -255,9 +279,13 @@ class _Lowerer:
                 sub_env[var] = self.b.constant(np.asarray(const))
         for var, t in zip(inner.invars, args):
             sub_env[var] = t
-        self.lower_eqns(sub_env, kept)
+        saved, self.live = self.live, live
+        try:
+            self.lower_eqns(sub_env, kept)
+        finally:
+            self.live = saved
         for outer, inner_out in zip(eqn.outvars, inner.outvars):
-            if not _is_dropvar(outer):
+            if not _is_dropvar(outer) and outer in self.live:
                 env[outer] = self.read(sub_env, inner_out)
 
     def _lower_value_eqn(self, env: Dict, eqn) -> List[Tensor]:
@@ -309,6 +337,20 @@ class _Lowerer:
             perm = tuple(eqn.params["permutation"])
             if perm == tuple(range(x.ndim)):
                 return [x]
+            if (
+                perm == (1, 0)
+                and x.instr.opcode == "dot"
+                and not x.instr.users
+                and all(o.ndim == 2 for o in x.instr.operands)
+            ):
+                # transpose(dot(a, b)) == dot(b^T, a^T).  AD emits this for
+                # every weight gradient (dw = (dy^T @ x)^T); commuting keeps
+                # the dot's result in the default layout — XLA CPU otherwise
+                # folds the result-transpose into a column-major dot output
+                # layout its DotThunk refuses to execute.  The original dot
+                # is orphaned here; lower_jaxpr's dead-instruction sweep
+                # removes it unless a later eqn still reads it.
+                return [self._commute_dot_transpose(x.instr)]
             return [b.transpose(x, perm)]
 
         if prim == "reshape":
@@ -334,6 +376,13 @@ class _Lowerer:
             shape = tuple(int(s) for s in eqn.params["shape"])
             return [b.iota(shape, int(eqn.params["dimension"]),
                            np.dtype(eqn.params["dtype"]))]
+
+        if prim == "clamp":
+            # lax.clamp(lo, x, hi) == min(max(x, lo), hi) elementwise
+            lo = self.to_shape(self.read(env, eqn.invars[0]), out_aval.shape)
+            x = self.to_shape(self.read(env, eqn.invars[1]), out_aval.shape)
+            hi = self.to_shape(self.read(env, eqn.invars[2]), out_aval.shape)
+            return [b.binary("min", b.binary("max", x, lo), hi)]
 
         if prim == "select_n":
             if len(eqn.invars) != 3:
@@ -414,6 +463,238 @@ class _Lowerer:
             out = b.convert(out, out_aval.dtype)
         return out
 
+    def _commute_dot_transpose(self, dot_instr) -> Tensor:
+        """``dot(a, b)^T`` as ``dot(b^T, a^T)``, cancelling an operand that
+        is itself a rank-2 transpose instead of stacking a second one."""
+        b = self.b
+
+        def flipped(instr) -> Tensor:
+            if instr.opcode == "transpose" and tuple(instr.attrs["perm"]) == (1, 0):
+                return Tensor(b, instr.operands[0])
+            return b.transpose(Tensor(b, instr), (1, 0))
+
+        lhs, rhs = dot_instr.operands
+        return b.dot(
+            flipped(rhs), flipped(lhs),
+            fusable=bool(dot_instr.attrs.get("fusable", True)),
+        )
+
+    # -- control flow ------------------------------------------------------
+    def _emit_loop(
+        self,
+        env: Dict,
+        eqn,
+        body_closed,
+        operands: List[Tensor],
+        *,
+        num_consts: int,
+        num_carry: int,
+        trip_count: int,
+        reverse: bool,
+        kind: str,
+    ) -> None:
+        """Shared scan/while tail: lower ``body_closed`` as a sub-module,
+        emit one ``call`` loop and a ``get`` per live outer output.
+
+        The contract with the executor is fully positional (operand order =
+        body parameter-creation order; ``out_order`` maps logical output j
+        to its position among the body's roots), so two structurally
+        identical bodies — e.g. stacked transformer layers — share one
+        compiled sub-module via ``module_signature``."""
+        inner = body_closed.jaxpr
+        n_x = len(inner.invars) - num_consts - num_carry
+        pnames = (
+            [f"c{i}" for i in range(num_consts)]
+            + [f"h{i}" for i in range(num_carry)]
+            + [f"x{i}" for i in range(n_x)]
+        )
+        sub = lower_jaxpr(
+            body_closed,
+            name=f"{self.b.module.name}.{kind}_body",
+            fuse_dot=self.fuse_dot,
+            param_names=pnames,
+        )
+        root_pos = {r.name: i for i, r in enumerate(sub.module.roots)}
+        out_order = [root_pos[n] for n in sub.output_names]
+        call = self.b.call_loop(
+            operands,
+            sub.module,
+            trip_count=trip_count,
+            num_consts=num_consts,
+            num_carry=num_carry,
+            out_order=out_order,
+            out_shapes=[tuple(int(s) for s in ov.aval.shape)
+                        for ov in eqn.outvars],
+            out_dtypes=[np.dtype(ov.aval.dtype) for ov in eqn.outvars],
+            reverse=reverse,
+            kind=kind,
+        )
+        for j, ov in enumerate(eqn.outvars):
+            if not _is_dropvar(ov) and ov in self.live:
+                env[ov] = self.b.get(call, j)
+
+    def _lower_scan(self, env: Dict, eqn) -> None:
+        """``lax.scan`` -> ``call`` loop.  Carries double-buffer through the
+        body plan; per-iteration outputs stack into ``(length, ...)``
+        buffers.  ``fori_loop`` over static Python-int bounds arrives here
+        too (jax lowers it to scan)."""
+        p = eqn.params
+        self._emit_loop(
+            env, eqn, p["jaxpr"],
+            [self.read(env, v) for v in eqn.invars],
+            num_consts=int(p["num_consts"]),
+            num_carry=int(p["num_carry"]),
+            trip_count=int(p["length"]),
+            reverse=bool(p["reverse"]),
+            kind="scan",
+        )
+
+    def _lower_while(self, env: Dict, eqn) -> None:
+        """``lax.while_loop`` lowers only when a static trip count is
+        provable from the canonical counter pattern jax emits for bounded
+        loops: cond = single ``lt(carry[i], LIMIT)`` eqn, body sets
+        ``carry[i] + 1``, and both the init and LIMIT are literals (LIMIT
+        may also be a cond constant fed by an outer literal)."""
+        trip, i = self._while_trip_count(eqn) or (None, None)
+        if trip is None:
+            raise UnsupportedPrimitiveError(
+                "while", eqn,
+                "no static trip count: lax.while_loop compiles only when "
+                "the condition is the canonical bounded-counter pattern "
+                "`carry[i] < LIMIT` with `carry[i] += 1` in the body and "
+                "literal init/limit; use lax.scan or lax.fori_loop with "
+                "static bounds",
+            )
+        p = eqn.params
+        cn = int(p["cond_nconsts"])
+        bn = int(p["body_nconsts"])
+        # drop the cond consts: the compiled loop replays the body only
+        self._emit_loop(
+            env, eqn, p["body_jaxpr"],
+            [self.read(env, v) for v in eqn.invars[cn:]],
+            num_consts=bn,
+            num_carry=len(eqn.outvars),
+            trip_count=trip,
+            reverse=False,
+            kind="while",
+        )
+
+    def _while_trip_count(self, eqn) -> Optional[Tuple[int, int]]:
+        """``(trip_count, counter_index)`` if the while is a provably
+        bounded counter loop, else None."""
+        p = eqn.params
+        cond = p["cond_jaxpr"].jaxpr
+        body = p["body_jaxpr"].jaxpr
+        cn, bn = int(p["cond_nconsts"]), int(p["body_nconsts"])
+        if len(cond.eqns) != 1 or cond.eqns[0].primitive.name != "lt":
+            return None
+        lt = cond.eqns[0]
+        if not cond.outvars or cond.outvars[0] is not lt.outvars[0]:
+            return None
+        ctr_atom, limit_atom = lt.invars
+        cond_carries = list(cond.invars[cn:])
+        if isinstance(ctr_atom, Literal) or ctr_atom not in cond_carries:
+            return None
+        i = cond_carries.index(ctr_atom)
+        if not np.issubdtype(np.dtype(ctr_atom.aval.dtype), np.integer):
+            return None
+        # LIMIT: a literal, or a cond const whose outer operand is a literal
+        if isinstance(limit_atom, Literal):
+            limit = int(np.asarray(limit_atom.val).item())
+        elif limit_atom in list(cond.invars[:cn]):
+            outer = eqn.invars[list(cond.invars[:cn]).index(limit_atom)]
+            if not isinstance(outer, Literal):
+                return None
+            limit = int(np.asarray(outer.val).item())
+        else:
+            return None
+        # body must step the counter by exactly one
+        out_i = body.outvars[i]
+        if isinstance(out_i, Literal) or _is_dropvar(out_i):
+            return None
+        step = next(
+            (e for e in body.eqns if any(v is out_i for v in e.outvars)), None
+        )
+        if step is None or step.primitive.name != "add":
+            return None
+
+        def _is_one(atom):
+            return (
+                isinstance(atom, Literal)
+                and np.asarray(atom.val).ndim == 0
+                and np.asarray(atom.val).item() == 1
+            )
+
+        ctr_body = body.invars[bn + i]
+        x, y = step.invars
+        if not ((x is ctr_body and _is_one(y)) or (y is ctr_body and _is_one(x))):
+            return None
+        init_atom = eqn.invars[cn + bn + i]
+        if not isinstance(init_atom, Literal):
+            return None
+        init = int(np.asarray(init_atom.val).item())
+        return max(0, limit - init), i
+
+    def _lower_cond(self, env: Dict, eqn) -> None:
+        """2-branch ``lax.cond`` inlines both branches and selects per
+        output (the same thing ``vmap``-of-cond does in jax); branch
+        payloads are elementwise towers, so the selects fuse into the
+        surrounding kernels instead of forcing a host-side branch."""
+        branches = eqn.params["branches"]
+        if len(branches) != 2:
+            raise UnsupportedPrimitiveError(
+                "cond", eqn,
+                f"{len(branches)}-way lax.switch "
+                "(only 2-branch lax.cond inlines via select)",
+            )
+        idx = self.read(env, eqn.invars[0])
+        args = [self.read(env, v) for v in eqn.invars[1:]]
+        wanted = [
+            j for j, ov in enumerate(eqn.outvars)
+            if not _is_dropvar(ov) and ov in self.live
+        ]
+        branch_outs: List[Dict[int, Tensor]] = []
+        for bi, br in enumerate(branches):
+            inner = br.jaxpr
+            live_outs = [inner.outvars[j] for j in wanted]
+            kept, live = _live_eqns(inner.eqns, live_outs)
+            sub_env: Dict = {}
+            for var, const in zip(inner.constvars, br.consts):
+                if var in live:
+                    sub_env[var] = self.b.constant(np.asarray(const))
+            for var, t in zip(inner.invars, args):
+                sub_env[var] = t
+            saved, self.live = self.live, live
+            try:
+                self.lower_eqns(sub_env, kept)
+            finally:
+                self.live = saved
+            branch_outs.append(
+                {j: self.read(sub_env, inner.outvars[j]) for j in wanted}
+            )
+        pred = self.b.binary(
+            "ne", idx, self.b.constant(np.asarray(0, dtype=idx.dtype))
+        )
+        for j in wanted:
+            ov = eqn.outvars[j]
+            shape = tuple(int(s) for s in ov.aval.shape)
+            dtype = np.dtype(ov.aval.dtype)
+            # branches[0] is the FALSE branch (lax.cond index semantics)
+            on_false, on_true = branch_outs[0][j], branch_outs[1][j]
+            for bi, t in ((0, on_false), (1, on_true)):
+                if tuple(t.shape) != shape or np.dtype(t.dtype) != dtype:
+                    raise UnsupportedPrimitiveError(
+                        "cond", eqn,
+                        f"branch {bi} output {j} lowered to "
+                        f"{np.dtype(t.dtype)}{list(t.shape)} but the cond "
+                        f"declares {dtype}{list(shape)}",
+                    )
+            env[ov] = self.b.select(
+                self.to_shape(pred, shape),
+                self.to_shape(on_true, shape),
+                self.to_shape(on_false, shape),
+            )
+
 
 def lower_jaxpr(
     closed_jaxpr,
@@ -433,6 +714,7 @@ def lower_jaxpr(
     b = GraphBuilder(name)
     lw = _Lowerer(b, fuse_dot)
     kept_eqns, live = _live_eqns(jaxpr.eqns, jaxpr.outvars)
+    lw.live = live
     env: Dict = {}
     for var, const in zip(jaxpr.constvars, closed_jaxpr.consts):
         if var in live:
@@ -466,5 +748,25 @@ def lower_jaxpr(
             t = b.reshape(t, instr.shape)
             instr = t.instr
         output_names.append(instr.name)
+
+    # Sweep instructions orphaned by peepholes (the commuted-dot rewrite
+    # leaves the original dot user-less when nothing else reads it) — a
+    # user-less non-output would otherwise become a phantom module root the
+    # executor computes and returns on every call.  Parameters stay: the
+    # feed contract covers unused arguments.
+    out_names = set(output_names)
+    changed = True
+    while changed:
+        changed = False
+        for instr in list(b.module.instructions):
+            if (
+                not instr.users
+                and instr.opcode != "parameter"
+                and instr.name not in out_names
+            ):
+                b.module.instructions.remove(instr)
+                for op in instr.operands:
+                    op.users.remove(instr)
+                changed = True
     b.module.verify()
     return LoweredJaxpr(b.module, list(param_names), output_names)

@@ -1,3 +1,4 @@
+from .base import BaseEngine
 from .engine import (
     PagedServeEngine,
     Request,

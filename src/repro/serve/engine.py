@@ -436,7 +436,7 @@ class ServeEngine(_ValidationMixin):
         self.requests_completed += 1
 
     # ------------------------------------------------------------- tick
-    def tick(self):
+    def tick(self) -> None:
         """Drain the wait queue into free slots, then one batched decode
         step for all active slots (per-slot pos)."""
         self._drain_queue()

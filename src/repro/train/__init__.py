@@ -6,5 +6,6 @@ from .trainer import (
     TrainerConfig,
     cross_entropy,
     make_loss_fn,
+    make_stitched_train_step,
     make_train_step,
 )

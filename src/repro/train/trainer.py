@@ -123,6 +123,41 @@ def make_train_step(
     return train_step
 
 
+def make_stitched_train_step(
+    loss_fn: Callable,
+    opt_cfg: AdamWConfig,
+    options=None,
+    **stitch_kwargs,
+):
+    """Compile ``value_and_grad(loss_fn)`` + the AdamW update as ONE stitched plan.
+
+    The whole training step — forward, backward, gradient clipping, LR
+    schedule and the per-leaf elementwise optimizer-update towers — is
+    captured through ``repro.stitch`` and planned together, so the update
+    math fuses with the tail of the backward pass instead of launching one
+    kernel per leaf.  ``params`` and ``opt_state`` buffers are donated, as
+    in the ``jax.jit`` path.
+
+    ``loss_fn(params, batch) -> scalar`` must be stitchable (no gather /
+    ``take_along_axis``); the production chunked-CE loss from
+    ``make_loss_fn`` is not, but MLP/MSE-style losses are — see
+    ``examples/train_stitched.py``.
+
+    Returns a ``StitchedFunction`` with the ``make_train_step`` signature:
+    ``(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    """
+    from ..frontend import stitch
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    stitch_kwargs.setdefault("name", "train_step")
+    stitch_kwargs.setdefault("donate_argnums", (0, 1))
+    return stitch(train_step, options=options, **stitch_kwargs)
+
+
 # ======================================================================
 # fault-tolerant driver
 # ======================================================================

@@ -259,7 +259,7 @@ def test_remat_checkpoint_inlines(rng):
 
 
 def test_stats_error_names_fallback_cause(rng):
-    fb = stitch(lambda x: jnp.sin(x), on_unsupported="fallback", options=OPTS)
+    fb = stitch(lambda x: jnp.cumsum(x), on_unsupported="fallback", options=OPTS)
     fb(rng.randn(4, 4).astype("f4"))
     with pytest.raises(ValueError, match="fell back to plain"):
         fb.stats
@@ -311,19 +311,22 @@ def test_stop_gradient_and_int_inputs(rng):
     assert_tree_close(stitch(fn, options=OPTS)(x, n), jax.jit(fn)(x, n))
 
 
-def test_lower_returns_module(rng):
+def test_lower_returns_lowered_handle(rng):
+    from repro import Lowered
+
     stitched = stitch(rmsnorm, options=OPTS)
     m = stitched.lower(
         jax.ShapeDtypeStruct((16, 64), jnp.float32),
         jax.ShapeDtypeStruct((64,), jnp.float32),
     )
-    assert isinstance(m, Module)
+    assert isinstance(m, Lowered)
+    assert isinstance(m.module, Module)
     assert [p.shape for p in m.parameters] == [(16, 64), (64,)]
     assert stitched.num_compiles == 0       # lowering never compiles
     with pytest.raises(ValueError, match="has not been compiled"):
         stitched.stats
     stitched(np.ones((16, 64), "f4"), np.ones(64, "f4"))
-    assert isinstance(stitched.lower(), Module)
+    assert isinstance(stitched.lower(), Lowered)
     assert "rmsnorm" in stitched.report()
 
 
@@ -349,18 +352,18 @@ def test_decorator_forms(rng):
 
 
 def test_unsupported_primitive_error_names_the_eqn(rng):
-    stitched = stitch(lambda x: jnp.sin(x) * 2.0, options=OPTS)
+    stitched = stitch(lambda x: jnp.cumsum(x) * 2.0, options=OPTS)
     with pytest.raises(UnsupportedPrimitiveError) as ei:
         stitched(rng.randn(4, 4).astype("f4"))
     err = ei.value
-    assert err.primitive == "sin"
-    assert err.eqn is not None and "sin" in str(err.eqn)
+    assert err.primitive == "cumsum"
+    assert err.eqn is not None and "cumsum" in str(err.eqn)
     assert "fallback" in str(err)           # points at the escape hatch
-    assert "sin" not in SUPPORTED_PRIMITIVES
+    assert "cumsum" not in SUPPORTED_PRIMITIVES
 
 
 def test_fallback_mode_runs_via_jax_jit(rng):
-    fn = lambda x: jnp.sin(x) + 1.0  # noqa: E731
+    fn = lambda x: jnp.cumsum(x) + 1.0  # noqa: E731
     stitched = stitch(fn, on_unsupported="fallback", options=OPTS)
     x = rng.randn(4, 4).astype("f4")
     assert_tree_close(stitched(x), jax.jit(fn)(x))
