@@ -9,7 +9,10 @@ Diffs a fresh ``bench.json`` (written by ``python -m benchmarks.run
     (``fusion_ratio/*``), a stitched launch count creeping up
     (``stitch/*/launch_reduction`` ``stitched=N``), the jaxpr frontend
     emitting more kernels than its hand-built parity plan
-    (``frontend/*/kernels`` ``stitched=N``), a chunked-prefill
+    (``frontend/*/kernels`` ``stitched=N``), a sharded plan launching more
+    per-device kernels than baseline or than its own single-device plan, or
+    losing bitwise parity with the shard_map oracle, or losing its stitched
+    phases around the all-reduce (``sharded/*``), a chunked-prefill
     decode-launch count creeping back toward the per-token O(S) loop
     (``serve_runtime/prefill_launches`` ``chunked=N``), the traced
     ExecutionPlan replay dispatching more segments per call
@@ -137,6 +140,16 @@ def compare(
                     base, cur,
                 ))
 
+        elif name.startswith("sharded/") and name.endswith("/kernels"):
+            b = _derived_int(base, "perdev")
+            f = _derived_int(cur, "perdev")
+            if b is not None and f is not None and f > b:
+                failures.append(_fail_msg(
+                    name, "perdev",
+                    f"per-device kernel count regressed {b} -> {f}",
+                    base, cur,
+                ))
+
         elif name == "train_step/kernels":
             b = _derived_int(base, "stitched")
             f = _derived_int(cur, "stitched")
@@ -259,6 +272,42 @@ def compare(
                     name, "hand/stitched",
                     f"jaxpr frontend emits {fs} kernels vs the hand-built "
                     f"plan's {fh} (lowering drifted from parity)",
+                    cur, cur,
+                ))
+
+    # sharded-compilation invariants (the shard-aware acceptance criteria)
+    # are checked WITHIN each fresh row, independent of the baseline: the
+    # per-device plan must never launch more kernels than the single-device
+    # plan of the same computation (the single= value the row itself
+    # carries), the replay must stay bit-identical to the shard_map oracle,
+    # and at least one all-reduce must keep stitched kernels on both sides
+    for name, cur in sorted(fresh.items()):
+        if name.startswith("sharded/") and name.endswith("/kernels"):
+            fp = _derived_int(cur, "perdev")
+            fs = _derived_int(cur, "single")
+            if fp is not None and fs is not None and fp > fs:
+                failures.append(_fail_msg(
+                    name, "perdev/single",
+                    f"sharded plan launches {fp} kernels per device vs the "
+                    f"single-device plan's {fs} — sharding must never cost "
+                    f"extra launches",
+                    cur, cur,
+                ))
+            br = _derived_int(cur, "breaks")
+            if br is not None and br < 1:
+                failures.append(_fail_msg(
+                    name, "breaks",
+                    "no all-reduce break has stitched kernels on both sides "
+                    "— compute stopped stitching around the collective",
+                    cur, cur,
+                ))
+        elif name.startswith("sharded/") and name.endswith("/parity"):
+            bw = _derived_int(cur, "bitwise")
+            if bw is not None and bw != 1:
+                failures.append(_fail_msg(
+                    name, "bitwise",
+                    "sharded replay is not bit-identical to the "
+                    "jax.jit-under-shard_map oracle",
                     cur, cur,
                 ))
 

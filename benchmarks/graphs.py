@@ -321,6 +321,121 @@ def reduce_towers_args(rng, num_towers: int = 6):
     )
 
 
+# --------------------------------------------------------------------------
+# Tensor-parallel family (shard-aware compilation): the same workloads with
+# Megatron-style TP placements.  Each function takes ``axis``: None gives the
+# single-device reference plan (the per-device-kernel ceiling in compare.py),
+# an axis name gives the shard_map body with the ``lax.psum`` all-reduce.
+# The collective always lands immediately after a library dot, so it breaks
+# no fusion group: per-device kernel counts match the single-device plan,
+# and the stitched kernels on both sides of the psum span the break.
+# --------------------------------------------------------------------------
+
+
+def nmt_tp_fn(q, k, v, bias, wo, axis=None):
+    """Head-parallel attention + row-parallel output projection.  ``q/k/v``
+    shard the head dim, ``wo`` the flattened head*dim rows; the psum after
+    the projection dot merges the per-head partial outputs."""
+    B, H, S, D = q.shape
+    kt = jnp.swapaxes(k, -1, -2)
+    scores = jnp.matmul(q, kt) * (1.0 / D ** 0.5) + bias
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.tanh(jnp.matmul(p, v))
+    # flatten to an explicit 2-D projection: a 3-D matmul would make jax
+    # insert a reshape between the dot and the psum, stranding it as its own
+    # kernel on the sharded side (single-device fuses it into the tail)
+    flat = jnp.reshape(jnp.transpose(ctx, (0, 2, 1, 3)), (B * S, H * D))
+    y = jnp.matmul(flat, wo)
+    if axis is not None:
+        y = jax.lax.psum(y, axis)
+    return y * jax.nn.sigmoid(y)
+
+
+#: the TP variant doubles the head count so each of the 8 shards keeps a
+#: real head dim (H=1 per shard would make jax squeeze the batched dots
+#: into a different graph than the single-device reference plan)
+NMT_TP_DIM = (4, 16, 32, 16)
+
+
+def nmt_tp_args(rng):
+    B, H, S, D = NMT_TP_DIM
+    return (
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(B, H, S, D).astype("f4"),
+        rng.randn(S, S).astype("f4"),
+        rng.randn(H * D, D).astype("f4"),
+    )
+
+
+def nmt_tp_specs():
+    from jax.sharding import PartitionSpec as P
+
+    return dict(
+        in_specs=(
+            P(None, "model"), P(None, "model"), P(None, "model"),
+            P(), P("model", None),
+        ),
+        out_specs=P(),
+    )
+
+
+def stacked_tp_fn(x, gains, w1s, w2s, axis=None):
+    """Megatron MLP blocks: W1 column-parallel, W2 row-parallel, one psum
+    per layer merging the partial block outputs into the residual stream."""
+    for g, W1, W2 in zip(gains, w1s, w2s):
+        ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + 1e-6)
+        normed = x * inv * g[None, :]
+        y = jnp.matmul(jax.nn.silu(jnp.matmul(normed, W1)), W2)
+        if axis is not None:
+            y = jax.lax.psum(y, axis)
+        x = x + y
+    return x
+
+
+def stacked_tp_args(rng, num_layers: int = 8):
+    B, D, F = 16, 64, 128
+    return (
+        rng.randn(B, D).astype("f4"),
+        [rng.randn(D).astype("f4") for _ in range(num_layers)],
+        [rng.randn(D, F).astype("f4") for _ in range(num_layers)],
+        [rng.randn(F, D).astype("f4") for _ in range(num_layers)],
+    )
+
+
+def stacked_tp_specs(num_layers: int = 8):
+    from jax.sharding import PartitionSpec as P
+
+    return dict(
+        in_specs=(
+            P(),
+            [P()] * num_layers,
+            [P(None, "model")] * num_layers,
+            [P("model", None)] * num_layers,
+        ),
+        out_specs=P(),
+    )
+
+
+#: tensor-parallel families: fn(..., axis=) + args + the shard_map specs +
+#: the StitchOptions overrides both the sharded and the single-device
+#: reference compile use (library dots keep the collective off any fusion
+#: group's interior).
+TP_FAMILIES = {
+    "NMT_TP": {
+        "fn": nmt_tp_fn, "args": nmt_tp_args, "specs": nmt_tp_specs,
+        "options": {"fuse_dot": False},
+    },
+    "Stacked_TP": {
+        "fn": stacked_tp_fn, "args": stacked_tp_args,
+        "specs": stacked_tp_specs, "options": {"fuse_dot": False},
+    },
+}
+
+
 #: frontend-parity families: jnp fn + example args + the hand-built module
 #: it must reproduce + the StitchOptions overrides the frontend compiles
 #: under (e.g. Stacked keeps its dots as library calls via fuse_dot=False,

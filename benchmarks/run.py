@@ -8,9 +8,18 @@ metric for that table: fusion ratio, speedup, shared-memory bytes, ...).
 from __future__ import annotations
 
 import argparse
+import functools
 import json
+import os
 import time
 from dataclasses import replace
+
+# The sharded rows need a real multi-device mesh; jax locks the device count
+# on first init, so the flag must be set before `import jax` (the same idiom
+# as launch/dryrun.py and tests/conftest.py).
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+).strip()
 
 import numpy as np
 
@@ -344,6 +353,76 @@ def bench_frontend():
              f"cold_us={t_cold * 1e6:.0f} "
              f"cache_speedup={t_cold / max(t_warm, 1e-9):.1f}x")
         )
+    return rows
+
+
+def bench_sharded():
+    """Shard-aware compilation (the multi-device rows): tensor-parallel NMT
+    and Stacked compiled to ONE multi-device ExecutionPlan on an 8-device
+    host-platform mesh.  Per row: per-device kernel/launch counts vs the
+    single-device plan of the same computation (the ceiling compare.py
+    gates on), bitwise parity with the jax.jit-under-shard_map oracle, and
+    the number of all-reduce breaks with stitched kernels on both sides."""
+    from jax.sharding import Mesh
+
+    from repro import stitch
+    from repro.core.shard import wrap_shard_map
+
+    from .graphs import TP_FAMILIES
+
+    devs = jax.devices()
+    if len(devs) < 8:
+        raise RuntimeError(
+            "bench_sharded needs 8 devices — run via `python -m "
+            "benchmarks.run` so the host-platform flag applies before jax init"
+        )
+    mesh = Mesh(np.array(devs[:8]).reshape(8), ("model",))
+    rows = []
+    rng = np.random.RandomState(0)
+    for name, fam in TP_FAMILIES.items():
+        args = fam["args"](rng)
+        specs = fam["specs"]()
+        opts = replace(OPTS, **fam["options"])
+        single = stitch(fam["fn"], options=opts, name=f"{name}_single")
+        single(*args)
+        ss = single.stats
+        tp = stitch(
+            functools.partial(fam["fn"], axis="model"),
+            options=opts, name=name, mesh=mesh, **specs,
+        )
+        out = tp(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        oracle = jax.jit(
+            wrap_shard_map(
+                functools.partial(fam["fn"], axis="model"),
+                mesh, specs["in_specs"], specs["out_specs"],
+            )
+        )(*args)
+        parity = int(all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(out),
+                            jax.tree_util.tree_leaves(oracle))
+        ))
+        t0 = time.perf_counter()
+        out = tp(*args)                      # plan-cache hit: no recompile
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        t_warm = time.perf_counter() - t0
+        st = tp.stats
+        perdev = st.stitched_kernels + st.standalone_kernels
+        single_k = ss.stitched_kernels + ss.standalone_kernels
+        rows.append(
+            (f"sharded/{name}/kernels", 0.0,
+             f"perdev={perdev} single={single_k} coll={st.collective_calls} "
+             f"breaks={st.collective_breaks_spanned} "
+             f"launches={st.traced_dispatches_per_call} "
+             f"compiles={tp.num_compiles}")
+        )
+        rows.append(
+            (f"sharded/{name}/parity", 0.0,
+             f"bitwise={parity} sharded_instrs={st.sharded_instrs} "
+             f"mode={st.replay_mode}")
+        )
+        rows.append((f"sharded/{name}/call", t_warm * 1e6, "devices=8"))
     return rows
 
 
@@ -698,6 +777,7 @@ ALL_BENCHES = [
     bench_stitching,
     bench_stitched_kernels,
     bench_frontend,
+    bench_sharded,
     bench_train_step,
     bench_serve_runtime,
     bench_serve_traffic,

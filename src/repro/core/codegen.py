@@ -168,6 +168,15 @@ def emit_fusion(
     assign = solution.assignment
     blocks = solution.blocks
     member_ids = {m.id for m in members}
+    for m in members:
+        if m.is_collective:
+            # unreachable through the planner (collectives are not fusable
+            # and have no schedule) — fail loudly rather than emit a kernel
+            # that silently drops the cross-device reduction
+            raise ValueError(
+                f"{m.name}: collective {m.opcode} cannot be emitted inside "
+                "a kernel; it must stay a standalone schedule break"
+            )
 
     def in_spec(instr: Instruction) -> pl.BlockSpec:
         sched = assign.get(instr.id, REPLICATED)
@@ -278,6 +287,12 @@ def emit_stitched_fusion(
     """
     if _VMEM is None:  # pragma: no cover - jax always ships pallas.tpu here
         raise RuntimeError("stitched emission needs pallas TPU scratch spaces")
+    for m in fusion.members:
+        if m.is_collective:
+            raise ValueError(
+                f"{m.name}: collective {m.opcode} cannot be emitted inside "
+                "a stitched kernel; it must stay a standalone schedule break"
+            )
     inputs = fusion.inputs
     roots = fusion.roots
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,6 +69,13 @@ class StitchOptions:
     autotune: bool = False
     measure_repeats: int = 5
     tuning_store_path: Optional[str] = None
+    # Shard-aware compilation: the (axis name, size) shape of the mesh the
+    # plan targets, e.g. (("data", 2), ("model", 4)).  Hashable on purpose —
+    # it salts the options fingerprint and the measured-store keys, while
+    # the live Mesh object (runtime-only) is passed to ``compile_module``
+    # separately, like ``donate_params``.  None = single-device compile;
+    # every pre-existing cache key stays byte-identical.
+    mesh_axes: Optional[Tuple[Tuple[str, int], ...]] = None
 
     VALID_PLANNERS = ("cost", "greedy")
 
@@ -98,6 +105,14 @@ class StitchOptions:
             raise ValueError(
                 f"measure_repeats must be >= 1, got {self.measure_repeats}"
             )
+        if self.mesh_axes is not None:
+            for entry in self.mesh_axes:
+                name, size = entry
+                if not isinstance(name, str) or int(size) < 1:
+                    raise ValueError(
+                        f"mesh_axes entries must be (name, size>=1) pairs, "
+                        f"got {entry!r}"
+                    )
 
 
 @dataclass
@@ -183,6 +198,16 @@ class CompileStats:
     measured_misses: int = 0
     measurements_taken: int = 0
     model_error_pct: Optional[float] = None
+    # Shard-aware compilation accounting (zero on single-device compiles):
+    # collective steps in the plan (ICI traffic — counted apart from kernels
+    # and library calls), their modeled wire time, how many of them sit
+    # BETWEEN two stitched kernels (compute fused on both sides of the
+    # break — the tentpole's acceptance metric), and how many instructions
+    # carry a non-trivial shard layout.
+    collective_calls: int = 0
+    collective_time_s: float = 0.0
+    collective_breaks_spanned: int = 0
+    sharded_instrs: int = 0
 
     @property
     def replay_dispatch_reduction(self) -> int:
@@ -291,9 +316,21 @@ def build_outputs(state: CompilationState) -> None:
         planner=state.fusion_plan.planner,
     )
     library_time = 0.0
+    collective_time = 0.0
+    collective_calls = 0
+    mesh_sizes = dict(getattr(state.options, "mesh_axes", None) or ())
     for s in plan.standalone:
         if s.opcode == "get":
             continue   # projection of a loop output — no launch, no cost
+        if s.is_collective:
+            # ICI traffic, not a kernel launch: charged by the ring model,
+            # reported apart from both kernel and library time.
+            g = 1
+            for a in s.attrs.get("axes", ()):
+                g *= mesh_sizes.get(a, 1)
+            collective_time += lib.model.collective_op_time(s, g)
+            collective_calls += 1
+            continue
         if s.opcode == "call":
             # a loop costs its body's predicted time per iteration
             sub = s.attrs["compiled_body"].stats
@@ -310,10 +347,42 @@ def build_outputs(state: CompilationState) -> None:
         else:
             predicted += t
 
+    # Collective breaks SPANNED by stitched compute: some fused kernel runs
+    # upstream of the collective and another downstream — the plan stitched
+    # compute into phases around the break (transitively: the value feeding
+    # an all-reduce is typically a library dot, with the fused compute one
+    # hop further).
+    fused_ids = set()
+    for f in final_fusions:
+        fused_ids.update(m.id for m in f.members)
+
+    def _reaches(start_ops, follow) -> bool:
+        seen, stack = set(), list(start_ops)
+        while stack:
+            i = stack.pop()
+            if i.id in seen:
+                continue
+            seen.add(i.id)
+            if i.id in fused_ids:
+                return True
+            stack.extend(follow(i))
+        return False
+
+    breaks_spanned = sum(
+        1
+        for s in plan.standalone
+        if s.is_collective
+        and _reaches(s.operands, lambda i: i.operands)
+        and _reaches(s.users, lambda i: i.users)
+    )
+
     executable = StitchedExecutable(
         state.module, plan, kernels,
         jit_replay=state.options.jit_replay,
         donate_params=state.donate_params,
+        mesh=state.mesh,
+        param_layouts=state.param_layouts,
+        out_layouts=state.out_layouts,
     )
     st = executable.launch_stats()
     hits = sum(1 for p in state.planned if p.cache_hit)
@@ -382,7 +451,11 @@ def build_outputs(state: CompilationState) -> None:
         greedy_kernels=pstats.greedy_kernels if pstats else 0,
         planner_kernels=pstats.planned_kernels if pstats else 0,
         unfused_kernels=unfused,
-        replay_mode="jit" if state.options.jit_replay else "eager",
+        replay_mode=(
+            "sharded"
+            if state.mesh is not None
+            else ("jit" if state.options.jit_replay else "eager")
+        ),
         eager_dispatches_per_call=st.eager_dispatches_per_call,
         traced_dispatches_per_call=st.traced_dispatches_per_call,
         donated_buffers=st.donated_buffers,
@@ -390,6 +463,10 @@ def build_outputs(state: CompilationState) -> None:
         measured_misses=m_misses,
         measurements_taken=state.measurements_taken,
         model_error_pct=float(np.mean(errors)) if errors else None,
+        collective_calls=collective_calls,
+        collective_time_s=collective_time,
+        collective_breaks_spanned=breaks_spanned,
+        sharded_instrs=state.shard_stats.get("sharded_instrs", 0),
     )
 
 
@@ -399,6 +476,9 @@ def compile_module(
     kernel_cache: Optional[KernelCache] = None,
     measured_store=None,
     donate_params=None,
+    mesh=None,
+    param_layouts=None,
+    out_layouts=None,
 ) -> CompiledModule:
     """Compile a StitchIR module through the default pass pipeline.
 
@@ -411,6 +491,14 @@ def compile_module(
     for it.  ``donate_params`` names parameters whose buffers the caller
     donates (the frontend's ``donate_argnums``) — runtime-only, never part
     of any cache fingerprint.
+
+    ``mesh``/``param_layouts``/``out_layouts`` make this a sharded compile:
+    the module must hold the PER-SHARD computation (a shard_map body, as
+    ``frontend.jaxpr_lower.lower_sharded_jaxpr`` produces), ``mesh`` is the
+    live Mesh the one ExecutionPlan replays on, and the layouts map
+    parameter names / outputs to ``core.shard`` layout tuples.  The mesh's
+    (name, size) shape must match ``options.mesh_axes`` — the hashable half
+    that salts every cache key.
     """
     opts = options or StitchOptions()
     t0 = time.perf_counter()
@@ -436,6 +524,9 @@ def compile_module(
         measured_base_hits=store.hits if store else 0,
         measured_base_misses=store.misses if store else 0,
         donate_params=frozenset(donate_params) if donate_params else None,
+        mesh=mesh,
+        param_layouts=param_layouts,
+        out_layouts=out_layouts,
     )
     default_pipeline().run(state)
     state.stats.compile_time_s = time.perf_counter() - t0

@@ -66,6 +66,7 @@ class LaunchStats:
     stitched_kernels: int = 0
     standalone_kernels: int = 0
     library_calls: int = 0
+    collective_calls: int = 0        # mesh collectives — ICI steps, not launches
     loop_calls: int = 0              # sub-module loops (``call`` instructions)
     # runtime replay accounting: how calls were dispatched so far
     traced_calls: int = 0            # calls through the jitted replay
@@ -661,6 +662,15 @@ class StitchedExecutable:
     ``jit_replay=True`` (the default) replays through the single traced
     callable; ``jit_replay=False`` keeps the eager per-step loop — the
     oracle the traced path is validated against.
+
+    A ``mesh`` makes this ONE multi-device plan: the same pre-bound step
+    loop is traced once under ``shard_map`` (``trace_steps`` inlined, with
+    collective steps lowering to ``lax.psum``-family calls between the
+    kernels) and jitted whole.  Feeds and results are then GLOBAL arrays;
+    the per-shard view each device runs is exactly the module the compiler
+    planned.  Every call — including ``jit_replay=False`` — goes through
+    the traced path, because collectives only evaluate where mesh axis
+    names are bound.
     """
 
     def __init__(
@@ -670,6 +680,9 @@ class StitchedExecutable:
         kernels: Dict[str, StitchedKernel],  # fusion name -> kernel
         jit_replay: bool = True,
         donate_params=None,
+        mesh=None,
+        param_layouts=None,
+        out_layouts=None,
     ):
         self.module = module
         self.plan = plan
@@ -678,32 +691,99 @@ class StitchedExecutable:
         self.execution_plan = ExecutionPlan(
             module, plan, kernels, donate_params=donate_params
         )
+        self.mesh = mesh
+        self.param_layouts = dict(param_layouts or {})
+        self.out_layouts = list(out_layouts) if out_layouts else None
+        self._sharded_fn = None
+        if mesh is not None:
+            self._build_sharded()
+
+    def _build_sharded(self) -> None:
+        from .shard import layout_to_pspec, wrap_shard_map
+
+        ep = self.execution_plan
+        in_specs = tuple(
+            layout_to_pspec(self.param_layouts.get(name))
+            for name, _, _, _ in ep._param_binds
+        )
+        outs = self.out_layouts or [None] * len(ep._root_binds)
+        out_specs = tuple(layout_to_pspec(l) for l in outs)
+
+        def run(*vals):
+            return tuple(ep.trace_steps(list(vals)))
+
+        self._sharded_fn = jax.jit(
+            wrap_shard_map(run, self.mesh, in_specs, out_specs)
+        )
+
+    def _global_shape(self, name: str, local: Tuple[int, ...]) -> Tuple[int, ...]:
+        lay = self.param_layouts.get(name)
+        if lay is None:
+            return tuple(local)
+        sizes = {str(a): int(self.mesh.shape[a]) for a in self.mesh.axis_names}
+        out = []
+        for d, e in zip(local, lay):
+            g = 1
+            for a in e or ():
+                g *= sizes.get(a, 1)
+            out.append(d * g)
+        return tuple(out)
+
+    def sharded_execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        """One dispatch of the whole multi-device plan on global feeds."""
+        ep = self.execution_plan
+        vals = []
+        for name, slot, dtype, shape in ep._param_binds:
+            if name not in feeds:
+                raise KeyError(f"missing feed for parameter {name}")
+            v = jnp.asarray(feeds[name], dtype=dtype)
+            want = self._global_shape(name, shape)
+            if tuple(v.shape) != want:
+                raise ValueError(
+                    f"{name}: global feed shape {tuple(v.shape)} != {want} "
+                    f"(per-shard {tuple(shape)})"
+                )
+            vals.append(v)
+        outs = self._sharded_fn(*vals)
+        ep.stats.traced_calls += 1
+        return {name: o for (name, _), o in zip(ep._root_binds, outs)}
 
     def launch_stats(self) -> LaunchStats:
         st = LaunchStats()
         st.stitched_kernels = len(self.plan.fusions)
         st.standalone_kernels = sum(
             1 for s in self.plan.standalone
-            if not s.is_library_call and s.opcode not in ("call", "get")
+            if not s.is_library_call
+            and not s.is_collective
+            and s.opcode not in ("call", "get")
         )
         st.library_calls = self.plan.num_library_calls
+        st.collective_calls = self.plan.num_collectives
         rt = self.execution_plan.stats
         st.loop_calls = rt.loop_calls
         st.traced_calls = rt.traced_calls
         st.eager_calls = rt.eager_calls
         st.jit_traces = rt.jit_traces
         st.eager_dispatches_per_call = rt.eager_dispatches_per_call
-        st.traced_dispatches_per_call = rt.traced_dispatches_per_call
+        st.traced_dispatches_per_call = (
+            1 if self.mesh is not None else rt.traced_dispatches_per_call
+        )
         st.donated_buffers = rt.donated_buffers
         return st
 
     def execute_eager(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        if self.mesh is not None:
+            return self.sharded_execute(feeds)
         return self.execution_plan.execute(feeds)
 
     def jit_execute(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        if self.mesh is not None:
+            return self.sharded_execute(feeds)
         return self.execution_plan.jit_execute(feeds)
 
     def __call__(self, feeds: Dict[str, object]) -> Dict[str, object]:
+        if self.mesh is not None:
+            return self.sharded_execute(feeds)
         if self.jit_replay:
             return self.execution_plan.jit_execute(feeds)
         return self.execution_plan.execute(feeds)

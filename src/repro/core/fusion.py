@@ -52,7 +52,11 @@ from .memory import MemoryInfeasible, plan_memory, plan_stitched_memory
 from .schedule import CONSISTENT, STITCHABLE, StitchVerdict, stitchable
 from . import span as span_lib
 
-# Opcodes that may live inside a fused computation.
+# Opcodes that may live inside a fused computation.  Collectives
+# (ir.COLLECTIVE_OPCODES) are deliberately absent: an all_reduce
+# synchronizes the mesh, so it is a hard schedule break — compute on each
+# side fuses into its own kernel and the collective stays a standalone
+# step, the same way PR 3's phase machinery breaks at VMEM interfaces.
 FUSABLE_OPCODES = frozenset(
     {
         "elementwise", "select", "reshape", "bitcast", "transpose",
@@ -191,14 +195,21 @@ class FusionPlan:
 
     @property
     def num_kernels(self) -> int:
-        """Kernel launches excluding library calls (paper's Fig-7 metric)."""
+        """Kernel launches excluding library calls and collectives (the
+        paper's Fig-7 metric; collectives are ICI traffic, not launches)."""
         return len(self.fusions) + sum(
-            1 for s in self.standalone if not s.is_library_call
+            1
+            for s in self.standalone
+            if not s.is_library_call and not s.is_collective
         )
 
     @property
     def num_library_calls(self) -> int:
         return sum(1 for s in self.standalone if s.is_library_call)
+
+    @property
+    def num_collectives(self) -> int:
+        return sum(1 for s in self.standalone if s.is_collective)
 
 
 @dataclass
@@ -261,8 +272,10 @@ class FusionScorer:
         stitch_max_blocks: int = 64,
         measured=None,
         options_salt: str = "",
+        mesh_axes: Tuple[Tuple[str, int], ...] = (),
     ):
         self.model = model or LatencyModel()
+        self.mesh_axes = dict(mesh_axes)
         # MeasuredCostStore (duck-typed: .get(sig) -> obj with .cost_s, or
         # None) — fusion.py cannot import core.measure (signature.py sits
         # between them in the import graph).
@@ -280,6 +293,11 @@ class FusionScorer:
         self._verdicts: Dict[frozenset, StitchVerdict] = {}
 
     def standalone_cost(self, instr: Instruction) -> float:
+        if instr.is_collective:
+            g = 1
+            for a in instr.attrs.get("axes", ()):
+                g *= self.mesh_axes.get(a, 1)
+            return self.model.collective_op_time(instr, g)
         return self.model.standalone_time(instr)
 
     def verdict(self, members: List[Instruction]) -> StitchVerdict:
@@ -910,8 +928,12 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
     plan = FusionPlan(real_fusions, standalone + extra, module, planner=stats)
 
     # --- planner accounting ----------------------------------------------
+    # Collectives are charged (collective_op_time) but never counted as
+    # kernels — they appear in neither mode's launch tally.
     shared_standalone = [
-        s for s in plan.standalone if not s.is_library_call
+        s
+        for s in plan.standalone
+        if not s.is_library_call and not s.is_collective
     ]
     # Split/no-fuse singletons stay singleton *fusions* (never standalone),
     # so the standalone list is identical in both modes and greedy's kernel
@@ -924,6 +946,10 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
     if scorer is not None:
         shared_cost = sum(
             scorer.standalone_cost(s) for s in shared_standalone
+        ) + sum(
+            scorer.standalone_cost(s)
+            for s in plan.standalone
+            if s.is_collective
         )
         stats.predicted_s = shared_cost + sum(
             f.modeled_cost_s

@@ -85,6 +85,14 @@ REDUCE_KINDS: Dict[str, Callable] = {
 
 SHAPE_OPS = frozenset({"reshape", "bitcast", "transpose", "broadcast"})
 
+# Cross-device collectives (shard-aware compilation).  These are real
+# instructions — not annotations — because they are schedule breaks: a
+# collective synchronizes the mesh, so no kernel may fuse across one.  The
+# planner leaves them standalone (they are deliberately NOT in
+# ``fusion.FUSABLE_OPCODES``) and the executor replays them as
+# ``lax.psum``-family calls inside the plan's ``shard_map`` trace.
+COLLECTIVE_OPCODES = frozenset({"all_reduce", "all_gather", "reduce_scatter"})
+
 _COMPARE_FNS = frozenset({"lt", "le", "gt", "ge", "eq", "ne", "and", "or", "not"})
 
 
@@ -148,6 +156,12 @@ class Instruction:
     def is_library_call(self) -> bool:
         """True for dots the user did NOT mark fusable (cuBLAS analogue)."""
         return self.opcode == "dot" and not self.attrs.get("fusable", False)
+
+    @property
+    def is_collective(self) -> bool:
+        """True for cross-device collectives (all_reduce & friends) — ICI
+        traffic, not kernel launches; never fused, never counted as kernels."""
+        return self.opcode in COLLECTIVE_OPCODES
 
     def footprint_bytes(self) -> int:
         """Memory IO footprint: bytes read + bytes written (paper Fig. 1)."""
@@ -264,6 +278,22 @@ def infer_shape(opcode, operand_shapes, attrs) -> Optional[Tuple[int, ...]]:
     if opcode == "gather":
         table, idx = operand_shapes
         return tuple(idx) + tuple(table[1:])
+    if opcode == "all_reduce":
+        return tuple(operand_shapes[0])
+    if opcode == "all_gather":
+        s = list(operand_shapes[0])
+        s[attrs["dim"]] *= int(attrs["group_size"])
+        return tuple(s)
+    if opcode == "reduce_scatter":
+        s = list(operand_shapes[0])
+        dim, g = attrs["dim"], int(attrs["group_size"])
+        if s[dim] % g:
+            raise ValueError(
+                f"reduce_scatter dim {dim} of size {s[dim]} not divisible by "
+                f"group size {g}"
+            )
+        s[dim] //= g
+        return tuple(s)
     raise ValueError(f"unknown opcode {opcode}")
 
 
@@ -330,6 +360,16 @@ def apply_op(instr: Instruction, *vals, shape_override: Optional[Tuple[int, ...]
         return _apply_call(instr, vals)
     if op == "get":
         return vals[0][a["index"]]
+    # Collectives are only evaluable when the plan trace runs under
+    # ``shard_map`` (the mesh axes in ``attrs["axes"]`` must be bound).
+    if op == "all_reduce":
+        return jax.lax.psum(vals[0], a["axes"])
+    if op == "all_gather":
+        return jax.lax.all_gather(vals[0], a["axes"], axis=a["dim"], tiled=True)
+    if op == "reduce_scatter":
+        return jax.lax.psum_scatter(
+            vals[0], a["axes"], scatter_dimension=a["dim"], tiled=True
+        )
     raise ValueError(f"cannot apply {op}")
 
 
@@ -564,6 +604,23 @@ class GraphBuilder:
 
     def iota(self, shape, dim=0, dtype=jnp.float32) -> Tensor:
         return self._emit("iota", shape, dtype, [], {"dim": dim})
+
+    # -- collectives (valid only inside a shard_map-replayed module) --------
+    def all_reduce(self, x: Tensor, axes) -> Tensor:
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        return self._emit("all_reduce", x.shape, x.dtype, [x], {"axes": axes})
+
+    def all_gather(self, x: Tensor, axes, dim: int, group_size: int) -> Tensor:
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        attrs = {"axes": axes, "dim": int(dim), "group_size": int(group_size)}
+        shape = infer_shape("all_gather", [x.shape], attrs)
+        return self._emit("all_gather", shape, x.dtype, [x], attrs)
+
+    def reduce_scatter(self, x: Tensor, axes, dim: int, group_size: int) -> Tensor:
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        attrs = {"axes": axes, "dim": int(dim), "group_size": int(group_size)}
+        shape = infer_shape("reduce_scatter", [x.shape], attrs)
+        return self._emit("reduce_scatter", shape, x.dtype, [x], attrs)
 
     def call_loop(
         self,

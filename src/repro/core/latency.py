@@ -66,6 +66,7 @@ class DeviceSpec:
     vmem_bw: float = 3.3e12                  # on-chip scratch, ~4x HBM
     vmem_bytes: int = 16 * 1024 * 1024
     ici_bw: float = 50e9                     # per link
+    ici_latency_s: float = 1.0e-6            # per-collective hop/sync latency
     launch_overhead_s: float = 2.0e-6        # kernel dispatch
     grid_step_overhead_s: float = 1.0e-7     # per grid program (pipelined)
     phase_loop_overhead_s: float = 5.0e-7    # per stitched-phase transition
@@ -321,3 +322,19 @@ class LatencyModel:
 
     def collective_time(self, nbytes: float, chips: int = 1) -> float:
         return nbytes / (chips * self.spec.ici_bw)
+
+    # ---- per-collective-op time (shard-aware plans) ----------------------
+    def collective_op_time(self, instr: Instruction, group_size: int) -> float:
+        """One collective instruction over a ``group_size``-device axis
+        group.  Ring algorithms move ``2*(n-1)/n`` of the payload per device
+        for all-reduce and ``(n-1)/n`` for all-gather/reduce-scatter, plus a
+        fixed per-collective sync latency.  This is what a collective costs
+        the plan — it is a schedule break, never a kernel launch."""
+        n = max(1, int(group_size))
+        payload = float(instr.bytesize)
+        if instr.opcode == "all_reduce":
+            wire = 2.0 * (n - 1) / n * payload
+        else:  # all_gather / reduce_scatter: payload is the larger tensor
+            big = max(payload, float(instr.operands[0].bytesize))
+            wire = (n - 1) / n * big
+        return self.spec.ici_latency_s + wire / self.spec.ici_bw

@@ -44,6 +44,7 @@ from .schedule import (
     resolve_stitched,
     stitchable,
 )
+from .shard import propagate_layouts
 from .signature import CacheEntry, KernelCache, fusion_signature
 from .tuning import TunedPlan, score, tune
 
@@ -94,6 +95,14 @@ class CompilationState:
     # cache fingerprint (like ``jit_replay``, it changes how a plan is
     # replayed, not what is tuned or emitted).
     donate_params: Optional[frozenset] = None
+    # Shard-aware compilation (set when ``options.mesh_axes`` is): the Mesh
+    # the plan replays on (runtime-only — never fingerprinted; its (name,
+    # size) shape IS fingerprinted via options.mesh_axes), parameter/output
+    # layouts from the shard_map trace, and ShardingPass counters.
+    mesh: Optional[object] = None
+    param_layouts: Optional[Dict[str, tuple]] = None
+    out_layouts: Optional[List] = None
+    shard_stats: Dict[str, int] = field(default_factory=dict)
     # Sub-module (loop body) compiles, filled by SubModulePass: unique
     # compiled bodies by structural module signature, plus call-site count.
     sub_compiled: Dict[str, object] = field(default_factory=dict)
@@ -166,6 +175,30 @@ class SubModulePass(Pass):
             instr.attrs["body_sig"] = sig
 
 
+class ShardingPass(Pass):
+    """Resolve shard layouts before fusion (the tentpole's pipeline hook).
+
+    When the compile targets a mesh (``options.mesh_axes`` set), walk the
+    module once with ``shard.propagate_layouts``: derive a layout for every
+    instruction from the parameter layouts, stamp non-trivial results into
+    ``attrs["shard"]`` (which salts ``fusion_signature`` downstream — the
+    kernel cache can never alias per-shard and full-shape kernels), track
+    pending partial sums, and validate collectives against the mesh.  A
+    no-mesh compile is untouched — not a single attr changes, so every
+    existing signature and cache key stays byte-identical.
+    """
+
+    name = "sharding"
+
+    def run(self, state: CompilationState) -> None:
+        mesh_axes = getattr(state.options, "mesh_axes", None)
+        if not mesh_axes:
+            return
+        state.shard_stats = propagate_layouts(
+            state.module, mesh_axes, state.param_layouts
+        )
+
+
 class FusionPass(Pass):
     """Deep fusion with the schedule+memory consistency checker (Fig. 4),
     cost-guided by the shared LatencyModel when ``options.planner`` is
@@ -191,6 +224,7 @@ class FusionPass(Pass):
                 stitch_max_blocks=opts.stitch_max_blocks,
                 measured=state.measured_store,
                 options_salt=_measure_salt(opts),
+                mesh_axes=getattr(opts, "mesh_axes", None) or (),
             )
 
         if scorer is not None:
@@ -276,11 +310,18 @@ def _measure_salt(opts) -> str:
     not how eagerly we measure, so a store warmed under ``autotune=True``
     must still serve a later read-only ``tuning_store_path`` compile."""
     srl = _stitch_replicate_limit(opts)
-    return (
+    salt = (
         f"i{int(opts.interpret)}:v{opts.vmem_limit}:r{opts.replicate_limit}"
         f":b{opts.max_blocks}:p{opts.planner}"
         f":st{int(opts.enable_stitching)}:sb{opts.stitch_max_blocks}:sr{srl}:"
     )
+    # Mesh shape enters the salt ONLY for sharded compiles: per-shard costs
+    # measured on an 8-way mesh must not serve a 4-way (or unsharded) run,
+    # while every pre-existing single-device key stays byte-identical.
+    mesh_axes = getattr(opts, "mesh_axes", None)
+    if mesh_axes:
+        salt += "m" + ",".join(f"{a}{s}" for a, s in mesh_axes) + ":"
+    return salt
 
 
 class SchedulePass(Pass):
@@ -618,6 +659,7 @@ def default_pipeline() -> PassPipeline:
     return PassPipeline(
         [
             SubModulePass(),
+            ShardingPass(),
             FusionPass(),
             SchedulePass(),
             MemoryPass(),

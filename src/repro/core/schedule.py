@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .ir import Instruction
+from .ir import COLLECTIVE_OPCODES, Instruction
 
 ROW = "Row"
 COLUMN = "Column"
@@ -256,6 +256,13 @@ def propagate(instr: Instruction, sched: Sched) -> List[Sched]:
 
     if op in ("iota", "constant", "parameter"):
         return []
+
+    if op in COLLECTIVE_OPCODES:
+        # Collectives synchronize the whole mesh — they can never live
+        # inside a kernel, so no block schedule exists for them.  The fusion
+        # pass keeps them out (not in FUSABLE_OPCODES); this guard makes a
+        # planner bug loud instead of a silent mis-schedule.
+        raise Unsatisfiable(f"{op} is a collective: schedule break, not fusable")
 
     raise Unsatisfiable(f"no propagation rule for {op}")
 

@@ -1,0 +1,290 @@
+"""Shard layouts: how a module's *local* (per-shard) tensors relate to the
+global arrays of a multi-device run.
+
+Shard-aware compilation traces the per-shard computation (the body of a
+``shard_map``), so every instruction shape in the module is already the
+LOCAL shape — fusion and the latency model score per-shard tiles with no
+changes.  What the local shapes cannot express is *placement*: which global
+dims are split over which mesh axes, and whether a value is a pending
+partial sum (a contraction over a sharded dim that still needs an
+``all_reduce``).  This module defines that annotation and propagates it.
+
+A **layout** is a tuple with one entry per dim: ``None`` (not sharded) or a
+tuple of mesh axis names the global dim is split over, e.g.
+``(("model",), None)`` for a row-sharded matrix.  ``None`` in place of the
+whole tuple means *unknown* — propagation lost track (an unmapped reshape),
+which is distinct from replicated: unknown layouts are never stamped and
+never validated against.
+
+``propagate_layouts`` walks a module once, derives a layout for every
+instruction from the parameter layouts, stamps non-trivial results into
+``instr.attrs["shard"]`` (and pending partial-sum axes into
+``attrs["partial"]``), and validates collectives against the mesh.  The
+stamped attrs flow into ``fusion_signature``/``module_signature`` through
+``_canon_attrs``, so the kernel cache can never alias a per-shard kernel
+with a full-shape one.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .ir import COLLECTIVE_OPCODES, Instruction, Module
+
+#: one entry per dim: None (unsharded) or a tuple of mesh axis names
+Layout = Tuple[Optional[Tuple[str, ...]], ...]
+
+
+def spec_to_layout(spec, rank: int) -> Layout:
+    """PartitionSpec (or any per-dim sequence) -> canonical layout tuple."""
+    entries = tuple(spec) if spec is not None else ()
+    out: List[Optional[Tuple[str, ...]]] = []
+    for i in range(rank):
+        e = entries[i] if i < len(entries) else None
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append((e,))
+        else:
+            out.append(tuple(e) or None)
+    return tuple(out)
+
+
+def names_to_layout(names: Dict[int, Sequence[str]], rank: int) -> Layout:
+    """shard_map ``in_names``/``out_names`` dict ({dim: axis names}) -> layout."""
+    return tuple(
+        tuple(names[d]) if d in names and names[d] else None for d in range(rank)
+    )
+
+
+def layout_to_pspec(layout: Optional[Layout]):
+    """Layout -> PartitionSpec for the executor's shard_map replay."""
+    from jax.sharding import PartitionSpec as P
+
+    if layout is None:
+        return P()
+    entries: List = []
+    for e in layout:
+        if not e:
+            entries.append(None)
+        elif len(e) == 1:
+            entries.append(e[0])
+        else:
+            entries.append(tuple(e))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def wrap_shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` across the installed JAX's API drift: new releases
+    expose ``jax.shard_map`` with ``check_vma``, older ones the experimental
+    module with ``check_rep``.  Checking is always off — sharded plans carry
+    deliberate partial-sum values between kernels and their collectives."""
+    import jax
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = "check_vma"
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+        kw = "check_rep"
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{kw: False})
+
+
+def mesh_axes_of(mesh) -> Tuple[Tuple[str, int], ...]:
+    """Hashable (name, size) description of a Mesh — what salts the kernel
+    cache and the measured-cost store (the Mesh object itself never enters a
+    fingerprint)."""
+    return tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def is_trivial_layout(layout: Optional[Layout]) -> bool:
+    return layout is None or all(e is None for e in layout)
+
+
+def _merge(a, b, where: str):
+    """Dim-wise merge of two operand layouts (same local shape)."""
+    if a is None or b is None:
+        return None
+    if len(a) != len(b):
+        return None
+    out = []
+    for da, db in zip(a, b):
+        if da is None or db is None:
+            # replicated op sharded: the sharded interpretation wins (a
+            # replicated operand holds the same slice-compatible values on
+            # every shard along that dim's axes)
+            out.append(da or db)
+        elif da != db:
+            raise ValueError(
+                f"shard layout conflict at {where}: dim sharded over {da} "
+                f"on one operand and {db} on another"
+            )
+        else:
+            out.append(da)
+    return tuple(out)
+
+
+def propagate_layouts(
+    module: Module,
+    mesh_axes: Sequence[Tuple[str, int]],
+    param_layouts: Optional[Dict[str, Layout]] = None,
+) -> Dict[str, int]:
+    """Derive and stamp a shard layout for every instruction.
+
+    ``mesh_axes`` is the (name, size) tuple the plan will run on;
+    ``param_layouts`` maps parameter names to layouts (missing = replicated).
+    Stamps ``attrs["shard"]`` only when the layout is known and non-trivial
+    (unsharded compiles stay byte-identical in every signature), and
+    ``attrs["partial"]`` with the mesh axes a value is a pending partial sum
+    over.  Raises ``ValueError`` on layout conflicts, collectives over axes
+    the mesh does not have, or group sizes that disagree with the mesh.
+    Returns counters for ``CompileStats``.
+    """
+    axis_size = {name: int(size) for name, size in mesh_axes}
+    param_layouts = param_layouts or {}
+    layouts: Dict[int, Optional[Layout]] = {}
+    partial: Dict[int, frozenset] = {}
+    replicated_cache: Dict[int, Layout] = {}
+
+    def _replicated(rank: int) -> Layout:
+        if rank not in replicated_cache:
+            replicated_cache[rank] = tuple([None] * rank)
+        return replicated_cache[rank]
+
+    def _group_size(axes: Tuple[str, ...]) -> int:
+        g = 1
+        for a in axes:
+            g *= axis_size[a]
+        return g
+
+    n_sharded = n_collectives = 0
+    for instr in module.instructions:
+        op = instr.opcode
+        ops = instr.operands
+        in_partial = frozenset().union(*(partial.get(o.id, frozenset()) for o in ops)) if ops else frozenset()
+        lay: Optional[Layout]
+
+        if op in COLLECTIVE_OPCODES:
+            n_collectives += 1
+            axes = tuple(instr.attrs["axes"])
+            for a in axes:
+                if a not in axis_size:
+                    raise ValueError(
+                        f"{instr.name}: collective over axis {a!r} but the "
+                        f"mesh has axes {sorted(axis_size)}"
+                    )
+            src = layouts.get(ops[0].id)
+            if op == "all_reduce":
+                lay = src
+                in_partial = in_partial - set(axes)
+            elif op == "all_gather":
+                if int(instr.attrs["group_size"]) != _group_size(axes):
+                    raise ValueError(
+                        f"{instr.name}: group_size "
+                        f"{instr.attrs['group_size']} != mesh size "
+                        f"{_group_size(axes)} of axes {axes}"
+                    )
+                if src is None:
+                    lay = None
+                else:
+                    d = instr.attrs["dim"]
+                    e = src[d]
+                    gathered = tuple(a for a in (e or ()) if a not in axes) or None
+                    lay = src[:d] + (gathered,) + src[d + 1:]
+            else:  # reduce_scatter
+                if int(instr.attrs["group_size"]) != _group_size(axes):
+                    raise ValueError(
+                        f"{instr.name}: group_size "
+                        f"{instr.attrs['group_size']} != mesh size "
+                        f"{_group_size(axes)} of axes {axes}"
+                    )
+                in_partial = in_partial - set(axes)
+                if src is None:
+                    lay = None
+                else:
+                    d = instr.attrs["dim"]
+                    e = tuple((src[d] or ())) + axes
+                    lay = src[:d] + (e,) + src[d + 1:]
+        elif op == "parameter":
+            lay = param_layouts.get(instr.name, _replicated(instr.ndim))
+        elif op in ("constant", "iota"):
+            lay = _replicated(instr.ndim)
+        elif op in ("elementwise", "select"):
+            lay = _replicated(instr.ndim)
+            for o in ops:
+                lay = _merge(lay, layouts.get(o.id), instr.name)
+        elif op in ("reshape", "bitcast"):
+            src = layouts.get(ops[0].id)
+            if src is not None and is_trivial_layout(src):
+                lay = _replicated(instr.ndim)
+            elif src is not None and len(src) == instr.ndim and tuple(
+                ops[0].shape
+            ) == tuple(instr.shape):
+                lay = src
+            else:
+                lay = None  # unmapped reshape of a sharded value: unknown
+        elif op == "transpose":
+            src = layouts.get(ops[0].id)
+            perm = instr.attrs["perm"]
+            lay = None if src is None else tuple(src[p] for p in perm)
+        elif op == "broadcast":
+            src = layouts.get(ops[0].id)
+            if src is None:
+                lay = None
+            else:
+                out: List[Optional[Tuple[str, ...]]] = [None] * instr.ndim
+                for i, d in enumerate(instr.attrs["dims"]):
+                    out[d] = src[i]
+                lay = tuple(out)
+        elif op == "reduce":
+            src = layouts.get(ops[0].id)
+            dims = set(instr.attrs["dims"])
+            if src is None:
+                lay = None
+            else:
+                lay = tuple(e for i, e in enumerate(src) if i not in dims)
+                reduced_axes = set()
+                for i in dims:
+                    reduced_axes.update(src[i] or ())
+                if reduced_axes:
+                    # each shard reduced only its local slice: partial sum
+                    in_partial = in_partial | reduced_axes
+        elif op == "dot":
+            l, r = layouts.get(ops[0].id), layouts.get(ops[1].id)
+            if l is None or r is None:
+                lay = None
+            else:
+                batch = _merge(l[:-2], r[:-2], instr.name)
+                lay = (
+                    None
+                    if batch is None
+                    else batch + (l[-2], r[-1])
+                )
+                contracted = set(l[-1] or ()) | set(r[-2] or ())
+                if contracted:
+                    in_partial = in_partial | contracted
+        elif op == "concat":
+            lay = _replicated(instr.ndim)
+            d = instr.attrs["dim"]
+            for o in ops:
+                lay = _merge(lay, layouts.get(o.id), instr.name)
+                if lay is None:
+                    break
+            if lay is not None and lay[d] is not None:
+                lay = None  # concat along a sharded dim: unknown
+        elif op == "gather":
+            t, idx = layouts.get(ops[0].id), layouts.get(ops[1].id)
+            lay = None if t is None or idx is None else idx + t[1:]
+        else:  # call/get and anything future: layout tracking stops
+            lay = None
+
+        layouts[instr.id] = lay
+        if in_partial:
+            partial[instr.id] = in_partial
+            instr.attrs["partial"] = tuple(sorted(in_partial))
+        if lay is not None and not is_trivial_layout(lay):
+            n_sharded += 1
+            instr.attrs["shard"] = lay
+
+    return {"sharded_instrs": n_sharded, "collective_ops": n_collectives}

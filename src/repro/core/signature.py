@@ -69,9 +69,18 @@ def fusion_signature(fusion: FusedComputation) -> str:
     mem_pos = {m.id: k for k, m in enumerate(members)}
     root_ids = {r.id for r in fusion.roots}
 
+    # Input features carry the shard layout when one is stamped: per-shard
+    # member shapes are already local, but a fusion fed by a model-sharded
+    # parameter and one fed by a replicated parameter of the same local shape
+    # must never alias in the cache.  The entry is appended only when
+    # non-trivial so unsharded signatures stay byte-identical across versions.
     feats: List = [
         ("phases", tuple(fusion.stitch_phases) if fusion.stitch_phases else None),
-        tuple((tuple(i.shape), str(np.dtype(i.dtype))) for i in inputs),
+        tuple(
+            (tuple(i.shape), str(np.dtype(i.dtype)))
+            + ((("shard", _canon_value(i.attrs["shard"])),) if i.attrs.get("shard") else ())
+            for i in inputs
+        ),
     ]
     for m in members:
         refs = tuple(

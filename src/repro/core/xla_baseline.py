@@ -77,6 +77,8 @@ def xla_baseline_kernel_count(module: Module, exclude_library: bool = True) -> i
     for r in xla_baseline_kernels(module):
         if r.opcode == "get":
             continue
+        if r.is_collective:
+            continue  # ICI traffic in ANY compiler — never a kernel launch
         if r.opcode == "call":
             total += xla_baseline_kernel_count(
                 r.attrs["body"], exclude_library

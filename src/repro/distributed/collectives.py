@@ -17,13 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # JAX >= 0.6: top-level shard_map, replication check named check_vma
-    _shard_map = jax.shard_map
-    _CHECK_KW = "check_vma"
-except AttributeError:  # older JAX: experimental shard_map with check_rep
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = "check_rep"
+from ..core.shard import wrap_shard_map
 
 
 def bucket_leaves(tree, bucket_bytes: int = 16 * 1024 * 1024) -> List[List[int]]:
@@ -79,6 +73,4 @@ def cross_pod_mean(tree, mesh: Mesh, compress: str = "bf16"):
         return jax.tree.map(lambda x: x / n, summed)
 
     specs = jax.tree.map(lambda _: P(), tree)
-    return _shard_map(
-        f, mesh=mesh, in_specs=(specs,), out_specs=specs, **{_CHECK_KW: False}
-    )(tree)
+    return wrap_shard_map(f, mesh, (specs,), specs)(tree)

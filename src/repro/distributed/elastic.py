@@ -23,6 +23,16 @@ def choose_mesh_shape(
     num_devices: int, prefer_model: int = 16
 ) -> Tuple[int, int]:
     """(data, model) for the surviving device count."""
+    if num_devices < 1:
+        raise ValueError(
+            f"choose_mesh_shape needs at least one device, got "
+            f"num_devices={num_devices}"
+        )
+    if prefer_model < 1:
+        raise ValueError(
+            f"prefer_model must be a positive model-parallel degree, got "
+            f"{prefer_model}"
+        )
     model = min(prefer_model, num_devices)
     while num_devices % model:
         model -= 1

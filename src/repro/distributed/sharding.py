@@ -90,6 +90,19 @@ def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
     return P(*dims)
 
 
+def param_layout(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                 stacked: bool = False):
+    """The ``core.shard`` layout tuple for one parameter — the same
+    placement ``param_spec`` names, in the form ``compile_module(...,
+    param_layouts=)`` and the ShardingPass consume (one entry per dim:
+    ``None`` or a tuple of mesh axis names)."""
+    from ..core.shard import spec_to_layout
+
+    return spec_to_layout(
+        param_spec(path, shape, mesh, stacked=stacked), len(shape)
+    )
+
+
 def params_shardings(param_tree, mesh: Mesh, stacked_keys=("layers", "enc_layers")):
     """NamedSharding pytree matching ``param_tree`` (arrays or SDS)."""
 

@@ -53,8 +53,15 @@ from ..core.compiler import (
     compile_module,
 )
 from ..core.ir import Module
+from ..core.shard import mesh_axes_of, wrap_shard_map
 from ..core.signature import KernelCache
-from .jaxpr_lower import LoweredJaxpr, UnsupportedPrimitiveError, lower_jaxpr
+from .jaxpr_lower import (
+    LoweredJaxpr,
+    LoweredShardedJaxpr,
+    UnsupportedPrimitiveError,
+    lower_jaxpr,
+    lower_sharded_jaxpr,
+)
 
 _FALLBACK_MODES = ("error", "fallback")
 
@@ -219,6 +226,9 @@ class StitchedFunction:
         static_argnums: Union[int, Sequence[int], None] = (),
         static_argnames: Union[str, Sequence[str], None] = (),
         donate_argnums: Union[int, Sequence[int], None] = (),
+        mesh=None,
+        in_specs=None,
+        out_specs=None,
     ):
         if not callable(fn):
             raise TypeError(f"stitch() requires a callable, got {type(fn).__name__}")
@@ -229,6 +239,9 @@ class StitchedFunction:
             )
         self._fn = fn
         self.options = options if options is not None else StitchOptions()
+        self.mesh = mesh
+        self.in_specs = in_specs
+        self.out_specs = out_specs
         self.on_unsupported = on_unsupported
         self.name = name or getattr(fn, "__name__", "stitched")
         self.static_argnums = _int_tuple(static_argnums, "static_argnums")
@@ -240,6 +253,23 @@ class StitchedFunction:
                 f"static_argnums and donate_argnums cannot intersect: "
                 f"{sorted(overlap)}"
             )
+        if mesh is not None:
+            if in_specs is None or out_specs is None:
+                raise ValueError(
+                    "stitch(mesh=...) needs in_specs and out_specs — the "
+                    "shard_map placement of every argument and output"
+                )
+            if self.static_argnums or self.static_argnames or self.donate_argnums:
+                raise ValueError(
+                    "stitch(mesh=...) does not compose with static_argnums/"
+                    "static_argnames/donate_argnums yet"
+                )
+            if not getattr(self.options, "mesh_axes", None):
+                self.options = dataclasses.replace(
+                    self.options, mesh_axes=mesh_axes_of(mesh)
+                )
+        elif in_specs is not None or out_specs is not None:
+            raise ValueError("in_specs/out_specs require mesh=...")
         self._plans: Dict[Any, _PlanEntry] = {}
         self._kernel_cache = KernelCache(self.options.kernel_cache_path)
         # Shared across this function's per-shape compiles (like the kernel
@@ -354,6 +384,13 @@ class StitchedFunction:
         shaped_args, shaped_kwargs = jax.tree_util.tree_map(
             _leaf_spec, (dyn_args, dyn_kwargs)
         )
+        if self.mesh is not None:
+            # Trace shard_map(fn) at GLOBAL shapes: jax leaves exactly one
+            # shard_map eqn whose inner jaxpr is the per-shard computation —
+            # that is what lower_sharded_jaxpr compiles.
+            inner = wrap_shard_map(
+                inner, self.mesh, self.in_specs, self.out_specs
+            )
         closed, out_shape = jax.make_jaxpr(inner, return_shape=True)(
             *shaped_args, **shaped_kwargs
         )
@@ -373,23 +410,45 @@ class StitchedFunction:
             )
         return self._measured_store
 
+    def _lower(self, closed) -> LoweredJaxpr:
+        if self.mesh is not None:
+            return lower_sharded_jaxpr(
+                closed, name=self.name, fuse_dot=self.options.fuse_dot
+            )
+        return lower_jaxpr(
+            closed, name=self.name, fuse_dot=self.options.fuse_dot
+        )
+
     def _compile_lowered(
         self, lowered: LoweredJaxpr, donate_params: Optional[frozenset]
     ) -> CompiledModule:
+        sharded = isinstance(lowered, LoweredShardedJaxpr)
         return compile_module(
             lowered.module, self.options, kernel_cache=self._kernel_cache,
             measured_store=self._get_measured_store(),
             donate_params=donate_params,
+            mesh=lowered.mesh if sharded else None,
+            param_layouts=lowered.param_layouts if sharded else None,
+            out_layouts=lowered.out_layouts if sharded else None,
         )
 
     def _fallback(self) -> Callable:
         if self._fallback_jit is None:
-            self._fallback_jit = jax.jit(
-                self._fn,
-                static_argnums=self.static_argnums,
-                static_argnames=self.static_argnames,
-                donate_argnums=self.donate_argnums,
-            )
+            if self.mesh is not None:
+                # The sharded oracle: the same shard_map placement, compiled
+                # whole by XLA — also the bit-parity reference in benchmarks.
+                self._fallback_jit = jax.jit(
+                    wrap_shard_map(
+                        self._fn, self.mesh, self.in_specs, self.out_specs
+                    )
+                )
+            else:
+                self._fallback_jit = jax.jit(
+                    self._fn,
+                    static_argnums=self.static_argnums,
+                    static_argnames=self.static_argnames,
+                    donate_argnums=self.donate_argnums,
+                )
         return self._fallback_jit
 
     def _compile(
@@ -399,9 +458,7 @@ class StitchedFunction:
             args, static_pos, dyn_args, dyn_kwargs, kwargs
         )
         try:
-            lowered = lower_jaxpr(
-                closed, name=self.name, fuse_dot=self.options.fuse_dot
-            )
+            lowered = self._lower(closed)
         except UnsupportedPrimitiveError:
             if self.on_unsupported != "fallback":
                 raise
@@ -460,9 +517,7 @@ class StitchedFunction:
             closed, _ = self._trace(
                 args, static_pos, dyn_args, dyn_kwargs, kwargs
             )
-            lowered = lower_jaxpr(
-                closed, name=self.name, fuse_dot=self.options.fuse_dot
-            )
+            lowered = self._lower(closed)
             donate = self._donated_param_names(n_args, static_pos, dyn_args)
             return Lowered(
                 lowered, lambda: self._compile_lowered(lowered, donate)
@@ -548,6 +603,9 @@ def stitch(
     static_argnums: Union[int, Sequence[int], None] = (),
     static_argnames: Union[str, Sequence[str], None] = (),
     donate_argnums: Union[int, Sequence[int], None] = (),
+    mesh=None,
+    in_specs=None,
+    out_specs=None,
 ) -> StitchedFunction:
     """Capture a JAX function into StitchIR and compile it per input shape.
 
@@ -574,12 +632,22 @@ def stitch(
     ``autotune``: convenience override of ``options.autotune`` —
     ``stitch(fn, autotune=True)`` times each unique kernel once on device
     and re-plans later shapes against measured costs (``core/measure.py``).
+
+    ``mesh`` + ``in_specs`` + ``out_specs`` compile ``fn`` as ONE
+    multi-device plan: the function is traced under ``shard_map`` with that
+    placement, collectives (``lax.psum`` family) lower to StitchIR
+    collective instructions (natural fusion breaks), fusion scores
+    per-shard tiles, and the whole ExecutionPlan replays under a single
+    ``jax.jit(shard_map(...))`` — bit-identical to jitting the shard_map
+    directly.  Callers pass GLOBAL arrays, as with ``jax.jit`` over a
+    sharded computation.
     """
     if fn is None:
         return functools.partial(
             stitch, options=options, on_unsupported=on_unsupported,
             name=name, autotune=autotune, static_argnums=static_argnums,
             static_argnames=static_argnames, donate_argnums=donate_argnums,
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         )
     if autotune is not None:
         options = dataclasses.replace(
@@ -589,5 +657,6 @@ def stitch(
     return StitchedFunction(
         fn, options=options, on_unsupported=on_unsupported, name=name,
         static_argnums=static_argnums, static_argnames=static_argnames,
-        donate_argnums=donate_argnums,
+        donate_argnums=donate_argnums, mesh=mesh, in_specs=in_specs,
+        out_specs=out_specs,
     )

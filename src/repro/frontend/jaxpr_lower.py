@@ -117,9 +117,23 @@ STRUCTURAL_PRIMS = frozenset(
 #: ``cond`` inlines both branches behind ``select``.
 CONTROL_FLOW_PRIMS = frozenset({"scan", "while", "cond"})
 
+#: collective primitives (appear only in shard_map-traced jaxprs, where an
+#: axis env binds the mesh axis names) lowered to StitchIR collective
+#: instructions — standalone schedule breaks replayed as lax.psum-family
+#: calls, never fused into kernels.
+COLLECTIVE_PRIMS = frozenset({"psum", "all_gather", "reduce_scatter"})
+
+#: collectives the frontend recognizes but does not lower yet: named error
+#: (with the fallback hint) instead of the generic unknown-primitive one.
+UNLOWERED_COLLECTIVE_PRIMS = frozenset(
+    {"ppermute", "all_to_all", "pmax", "pmin", "pbroadcast", "pgather",
+     "axis_index", "psum_scatter"}
+)
+
 SUPPORTED_PRIMITIVES = frozenset(
     set(UNARY_PRIMS) | set(BINARY_PRIMS) | set(REDUCE_PRIMS)
     | IDENTITY_PRIMS | CALL_PRIMS | STRUCTURAL_PRIMS | CONTROL_FLOW_PRIMS
+    | COLLECTIVE_PRIMS
 )
 
 
@@ -403,7 +417,54 @@ class _Lowerer:
         if prim == "dot_general":
             return [self._dot_general(env, eqn)]
 
+        if prim in COLLECTIVE_PRIMS:
+            return self._lower_collective(env, eqn)
+
+        if prim in UNLOWERED_COLLECTIVE_PRIMS:
+            raise UnsupportedPrimitiveError(
+                prim, eqn,
+                "collective not lowered by the sharded frontend yet; only "
+                "psum, all_gather and reduce_scatter compile to StitchIR",
+            )
+
         raise UnsupportedPrimitiveError(prim, eqn)
+
+    def _lower_collective(self, env: Dict, eqn) -> List[Tensor]:
+        """psum/all_gather/reduce_scatter -> StitchIR collective instructions.
+
+        These only appear in shard_map-traced jaxprs (an axis env must bind
+        the names); the executor replays them as the matching lax call
+        inside its own shard_map, so axis semantics round-trip exactly."""
+        b = self.b
+        prim = eqn.primitive.name
+        p = eqn.params
+        if p.get("axis_index_groups") is not None:
+            raise UnsupportedPrimitiveError(
+                prim, eqn, "axis_index_groups subgrouping is not supported"
+            )
+        raw = p["axes"] if prim == "psum" else p["axis_name"]
+        axes = (raw,) if isinstance(raw, str) else tuple(raw)
+        if not axes or not all(isinstance(a, str) for a in axes):
+            raise UnsupportedPrimitiveError(
+                prim, eqn,
+                "positional (vmap) axes cannot lower to mesh collectives",
+            )
+        if prim == "psum":
+            # one all_reduce per operand (lax.psum over a tree arrives as a
+            # single multi-operand eqn)
+            return [b.all_reduce(self.read(env, v), axes) for v in eqn.invars]
+        if not p.get("tiled", False):
+            raise UnsupportedPrimitiveError(
+                prim, eqn,
+                "untiled gather/scatter (a fresh leading dim) is not "
+                "supported; lax.all_gather(..., tiled=True) and "
+                "lax.psum_scatter(..., tiled=True) compile",
+            )
+        x = self.read(env, eqn.invars[0])
+        g = int(p["axis_size"])
+        if prim == "all_gather":
+            return [b.all_gather(x, axes, int(p["all_gather_dimension"]), g)]
+        return [b.reduce_scatter(x, axes, int(p["scatter_dimension"]), g)]
 
     # -- bespoke lowerings ------------------------------------------------
     def _integer_pow(self, env: Dict, eqn) -> Tensor:
@@ -731,11 +792,24 @@ def lower_jaxpr(
             pname, tuple(var.aval.shape), np.dtype(var.aval.dtype)
         )
     lw.lower_eqns(env, kept_eqns)
+    output_names = _finish_outputs(b, lw, env, jaxpr.outvars)
+    return LoweredJaxpr(b.module, list(param_names), output_names)
 
-    # Outputs must be module roots (the executor returns sink values).  An
-    # output that aliases a parameter/constant, an interior value with other
-    # users, or a repeated output gets a value-preserving reshape sink.
-    out_tensors = [lw.read(env, ov) for ov in jaxpr.outvars]
+
+def _finish_outputs(b: GraphBuilder, lw: _Lowerer, env: Dict, outvars) -> List[str]:
+    """Shared lowering tail: root sinks for the outputs + orphan sweep.
+
+    Outputs must be module roots (the executor returns sink values).  An
+    output that aliases a parameter/constant, an interior value with other
+    users, or a repeated output gets a value-preserving reshape sink.
+
+    The sweep removes instructions orphaned by peepholes (the commuted-dot
+    rewrite leaves the original dot user-less when nothing else reads it) —
+    a user-less non-output would otherwise become a phantom module root the
+    executor computes and returns on every call.  Parameters stay: the feed
+    contract covers unused arguments.
+    """
+    out_tensors = [lw.read(env, ov) for ov in outvars]
     dup = Counter(t.instr.id for t in out_tensors)
     output_names: List[str] = []
     for t in out_tensors:
@@ -749,11 +823,6 @@ def lower_jaxpr(
             instr = t.instr
         output_names.append(instr.name)
 
-    # Sweep instructions orphaned by peepholes (the commuted-dot rewrite
-    # leaves the original dot user-less when nothing else reads it) — a
-    # user-less non-output would otherwise become a phantom module root the
-    # executor computes and returns on every call.  Parameters stay: the
-    # feed contract covers unused arguments.
     out_names = set(output_names)
     changed = True
     while changed:
@@ -769,4 +838,130 @@ def lower_jaxpr(
                     op.users.remove(instr)
                 changed = True
     b.module.verify()
-    return LoweredJaxpr(b.module, list(param_names), output_names)
+    return output_names
+
+
+@dataclass
+class LoweredShardedJaxpr(LoweredJaxpr):
+    """A shard_map-captured function: the PER-SHARD module plus the mesh
+    placement the one multi-device ExecutionPlan replays under.
+
+    ``param_layouts`` maps parameter names to ``core.shard`` layout tuples
+    (from the shard_map ``in_names``); ``out_layouts`` is one layout per
+    module root, in ``module.roots`` order — exactly what
+    ``compile_module(..., mesh=, param_layouts=, out_layouts=)`` takes.
+    """
+
+    mesh: object = None
+    mesh_axes: Tuple = ()
+    param_layouts: Dict[str, Tuple] = None
+    out_layouts: List = None
+
+
+def lower_sharded_jaxpr(
+    closed_jaxpr,
+    *,
+    name: str = "stitched",
+    fuse_dot: bool = True,
+    param_names: Optional[Sequence[str]] = None,
+) -> LoweredShardedJaxpr:
+    """Lower a jaxpr whose whole body is ONE ``shard_map`` eqn.
+
+    The caller traces ``shard_map(fn, mesh, in_specs, out_specs)`` at
+    GLOBAL shapes (``frontend.api`` does this when ``stitch`` is given a
+    mesh); jax leaves a single shard_map eqn whose inner jaxpr is the
+    per-shard computation — local shapes, collectives as psum-family eqns.
+    That inner jaxpr is what lowers to StitchIR: fusion and the latency
+    model then score per-shard tiles with no further changes, and the
+    shard_map placement (mesh + in/out names) rides along for the
+    ShardingPass and the executor's replay.
+
+    Closure constants are hoisted by jax to the OUTER jaxpr and enter the
+    shard_map as extra replicated operands — those materialize as IR
+    constants.  A constant operand that shard_map expects SHARDED has no
+    global value to slice here and raises ``UnsupportedPrimitiveError``.
+    """
+    from ..core.shard import mesh_axes_of, names_to_layout
+
+    jaxpr = closed_jaxpr.jaxpr
+    sm = [e for e in jaxpr.eqns if e.primitive.name == "shard_map"]
+    if len(sm) != 1 or len(jaxpr.eqns) != 1:
+        raise UnsupportedPrimitiveError(
+            "shard_map", None,
+            "sharded capture expects the traced function to be exactly one "
+            "shard_map call wrapping the whole computation",
+        )
+    eqn = sm[0]
+    mesh = eqn.params["mesh"]
+    inner = eqn.params["jaxpr"]          # raw per-shard Jaxpr (no constvars)
+    in_names = eqn.params["in_names"]
+    out_names_p = eqn.params["out_names"]
+
+    outer_args = {v: i for i, v in enumerate(jaxpr.invars)}
+    consts = dict(zip(jaxpr.constvars, closed_jaxpr.consts))
+    if param_names is None:
+        param_names = [f"arg{i}" for i in range(len(jaxpr.invars))]
+    if len(param_names) != len(jaxpr.invars):
+        raise ValueError(
+            f"{len(param_names)} param names for {len(jaxpr.invars)} jaxpr invars"
+        )
+
+    b = GraphBuilder(name)
+    lw = _Lowerer(b, fuse_dot)
+    kept_eqns, live = _live_eqns(inner.eqns, inner.outvars)
+    lw.live = live
+    env: Dict = {}
+    used_names: List[str] = []
+    param_layouts: Dict[str, Tuple] = {}
+    # Parameters first, in outer-arg order, so the executor's positional
+    # contract matches the user's flattened arguments; constant operands
+    # (hoisted closures) fold afterwards.
+    binds = sorted(
+        range(len(eqn.invars)),
+        key=lambda k: (
+            outer_args.get(eqn.invars[k], len(outer_args)) if not isinstance(
+                eqn.invars[k], Literal) else len(outer_args),
+            k,
+        ),
+    )
+    for k in binds:
+        atom = eqn.invars[k]
+        ivar = inner.invars[k]
+        rank = len(ivar.aval.shape)
+        layout = names_to_layout(in_names[k], rank)
+        if not isinstance(atom, Literal) and atom in outer_args:
+            pname = param_names[outer_args[atom]]
+            env[ivar] = b.parameter(
+                pname, tuple(ivar.aval.shape), np.dtype(ivar.aval.dtype)
+            )
+            used_names.append(pname)
+            param_layouts[pname] = layout
+            continue
+        if any(e for e in layout):
+            raise UnsupportedPrimitiveError(
+                "shard_map", eqn,
+                "a closure constant enters the shard_map sharded; only "
+                "replicated closure constants are supported — pass sharded "
+                "values as function arguments",
+            )
+        val = atom.val if isinstance(atom, Literal) else consts[atom]
+        env[ivar] = b.constant(np.asarray(val))
+    lw.lower_eqns(env, kept_eqns)
+    output_names = _finish_outputs(b, lw, env, inner.outvars)
+
+    out_layout_by_name = {
+        oname: names_to_layout(names, len(ov.aval.shape))
+        for oname, ov, names in zip(output_names, inner.outvars, out_names_p)
+    }
+    out_layouts = [
+        out_layout_by_name.get(r.name) for r in b.module.roots
+    ]
+    return LoweredShardedJaxpr(
+        b.module,
+        used_names,
+        output_names,
+        mesh=mesh,
+        mesh_axes=mesh_axes_of(mesh),
+        param_layouts=param_layouts,
+        out_layouts=out_layouts,
+    )

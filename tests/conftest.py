@@ -1,13 +1,18 @@
 import os
 import sys
 
+# Sharded-compile tests need a real multi-device mesh; jax locks the device
+# count on first init, so the flag must be set before `import jax` (the same
+# idiom as launch/dryrun.py, which sets its own 512-way count per-process).
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+).strip()
+
 import numpy as np
 import pytest
 
 import jax
 
-# Tests and benches must see ONE CPU device (the dry-run sets its own 512-way
-# host platform count in its process, never here).
 jax.config.update("jax_platform_name", "cpu")
 
 

@@ -134,3 +134,50 @@ def test_cross_pod_mean_reduces():
     g = {"w": jnp.arange(8.0)}
     out = cross_pod_mean(g, mesh, compress="bf16")
     np.testing.assert_allclose(np.asarray(out["w"]), np.arange(8.0), atol=1e-2)
+
+
+def test_param_spec_fallback_small_dim_to_fsdp():
+    # model axis (16) does not divide 24, but fsdp does divide both dims and
+    # the big dim left fsdp unused? No: big dim takes fsdp; small dim falls
+    # back to fsdp only when the big dim could NOT take it.
+    mesh = FakeMesh({"data": 4, "model": 16})
+    s = param_spec("/x/w", (30, 24), mesh)   # 30 % 4 != 0 -> big dim open
+    assert s[1] == ("data",) and s[0] is None  # small dim takes the fsdp axes
+
+
+def test_param_layout_bridges_spec_to_stitch_layout():
+    from repro.distributed.sharding import param_layout
+
+    lay = param_layout("/embed/unembed", (5120, 202240), MESH1)
+    assert lay == ((("data",)), ("model",)) or lay == (("data",), ("model",))
+    lay = param_layout("/x/w", (7, 13), MESH1)
+    assert lay == (None, None)
+
+
+def test_opt_state_shardings_mirror_params():
+    from repro.distributed.sharding import opt_state_shardings
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    pshard = {"w": jax.sharding.NamedSharding(mesh, P("data", "model"))}
+    o = opt_state_shardings(None, pshard, mesh)
+    assert o.m["w"] is pshard["w"] and o.v["w"] is pshard["w"]
+    assert o.step.spec == P()
+
+
+def test_choose_mesh_shape_validation():
+    from repro.distributed.elastic import choose_mesh_shape, make_elastic_mesh
+
+    assert choose_mesh_shape(8, 4) == (2, 4)
+    assert choose_mesh_shape(6, 4) == (2, 3)   # 4 -> 3 preserves divisibility
+    with pytest.raises(ValueError, match="num_devices"):
+        choose_mesh_shape(0)
+    with pytest.raises(ValueError, match="num_devices"):
+        choose_mesh_shape(-2, 4)
+    with pytest.raises(ValueError, match="prefer_model"):
+        choose_mesh_shape(8, 0)
+    with pytest.raises(ValueError, match="prefer_model"):
+        choose_mesh_shape(8, -1)
+    with pytest.raises(ValueError, match="num_devices"):
+        make_elastic_mesh(devices=[], prefer_model=4)
+    with pytest.raises(ValueError, match="prefer_model"):
+        make_elastic_mesh(prefer_model=0)

@@ -224,8 +224,8 @@ def test_pass_times_cover_all_stages(rng):
     m = _stacked_module(2)
     comp = compile_and_compare(m, _feeds(m, rng))
     assert set(comp.stats.pass_times) == {
-        "submodule", "fusion", "schedule", "memory", "codegen", "autotune",
-        "finalize",
+        "submodule", "sharding", "fusion", "schedule", "memory", "codegen",
+        "autotune", "finalize",
     }
     assert comp.stats.compile_time_s > 0
 
