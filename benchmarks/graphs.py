@@ -178,9 +178,9 @@ def stacked_transformer_graph(num_layers: int = 8) -> Module:
     b = GraphBuilder("Stacked")
     B, D = 16, 64
     x = b.parameter("x", (B, D), jnp.float32)
-    for l in range(num_layers):
-        g = b.parameter(f"g{l}", (D,), jnp.float32)
-        W = b.parameter(f"W{l}", (D, D), jnp.float32)
+    for layer in range(num_layers):
+        g = b.parameter(f"g{layer}", (D,), jnp.float32)
+        W = b.parameter(f"W{layer}", (D, D), jnp.float32)
         ms = b.reduce(b.square(x), (1,), "mean")
         inv = b.rsqrt(ms + 1e-6)
         normed = x * b.broadcast(inv, (B, D), (0,)) * b.broadcast(g, (B, D), (1,))
@@ -286,7 +286,7 @@ def stacked_fn(x, gains, weights):
     """Pre-norm transformer-ish blocks in plain jnp — mirrors
     ``stacked_transformer_graph`` (dots stay library calls: compile with
     ``fuse_dot=False``)."""
-    for g, W in zip(gains, weights):
+    for g, W in zip(gains, weights, strict=False):
         ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
         inv = jax.lax.rsqrt(ms + 1e-6)
         normed = x * inv * g[None, :]
@@ -307,7 +307,7 @@ def reduce_towers_fn(xs, ss):
     """Independent square/scale/reduce towers in plain jnp — mirrors
     ``reduce_towers_graph`` (the horizontal-merge adversary)."""
     outs = []
-    for x, s in zip(xs, ss):
+    for x, s in zip(xs, ss, strict=False):
         e = jnp.square(x * 0.5 + s)
         outs.append(jnp.sum(e * e))
     return tuple(outs)
@@ -385,7 +385,7 @@ def nmt_tp_specs():
 def stacked_tp_fn(x, gains, w1s, w2s, axis=None):
     """Megatron MLP blocks: W1 column-parallel, W2 row-parallel, one psum
     per layer merging the partial block outputs into the residual stream."""
-    for g, W1, W2 in zip(gains, w1s, w2s):
+    for g, W1, W2 in zip(gains, w1s, w2s, strict=False):
         ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
         inv = jax.lax.rsqrt(ms + 1e-6)
         normed = x * inv * g[None, :]

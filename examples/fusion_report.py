@@ -30,6 +30,8 @@ def main():
               f"hit rate {s.cache_hit_rate:.0%}) | compile "
               f"{s.compile_time_s * 1e3:.1f}ms "
               + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in s.pass_times.items()))
+        print(f"    verify[{s.verify_mode}]: {s.verify_boundaries} boundaries, "
+              f"{s.verify_warnings} warnings, {s.verify_time_s * 1e3:.1f}ms")
         print(f"    planner[{s.planner_mode}]: {s.plans_explored} plans explored "
               f"({s.plans_rejected} infeasible), {s.planner_splits} splits, "
               f"{s.planner_merges} merges, {s.planner_packs} packs, "

@@ -42,7 +42,7 @@ def mlp_stack(x, gains, w1s, w2s):
     """Pre-norm MLP blocks, written for ONE shard: each device holds a
     column slice of W1 and a row slice of W2, and the psum merges the
     per-device partial outputs back into the replicated residual stream."""
-    for g, W1, W2 in zip(gains, w1s, w2s):
+    for g, W1, W2 in zip(gains, w1s, w2s, strict=False):
         ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
         normed = x * jax.lax.rsqrt(ms + 1e-6) * g[None, :]
         y = jnp.matmul(jax.nn.silu(jnp.matmul(normed, W1)), W2)

@@ -29,8 +29,10 @@ __version__ = "1.2.0"
 from .core import (  # noqa: F401
     CompiledModule,
     CompileStats,
+    Diagnostic,
     Module,
     StitchOptions,
+    VerificationError,
     compile_module,
 )
 from .frontend import (  # noqa: F401
@@ -60,6 +62,9 @@ __all__ = [
     "CompileStats",
     "Module",
     "compile_module",
+    # verification (core/verify.py)
+    "Diagnostic",
+    "VerificationError",
     # serving
     "BaseEngine",
     "ServeEngine",

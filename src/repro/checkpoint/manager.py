@@ -17,7 +17,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

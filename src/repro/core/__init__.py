@@ -71,6 +71,15 @@ from .schedule import (
 )
 from .span import compute_spans, critical_path_length, layers
 from .tuning import TunedPlan, tune
+from .verify import (
+    RULES,
+    Diagnostic,
+    VerificationError,
+    resolve_verify_mode,
+    verify_execution_plan,
+    verify_module,
+    verify_state,
+)
 from .xla_baseline import xla_baseline_groups, xla_baseline_kernel_count
 
 __all__ = [
@@ -92,4 +101,6 @@ __all__ = [
     "candidate_schedules", "chunk_shape", "propagate", "resolve_schedules",
     "compute_spans", "critical_path_length", "layers", "TunedPlan", "tune",
     "xla_baseline_groups", "xla_baseline_kernel_count",
+    "Diagnostic", "VerificationError", "RULES", "resolve_verify_mode",
+    "verify_module", "verify_state", "verify_execution_plan",
 ]

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +55,7 @@ from .schedule import (
 def _starts(shape, sched: Sched, b):
     idx = block_index(shape, sched, b)
     cs = chunk_shape(shape, sched)
-    return tuple(i * c for i, c in zip(idx, cs))
+    return tuple(i * c for i, c in zip(idx, cs, strict=False))
 
 
 def _adapt(val, opnd: Instruction, stored: Sched, needed: Sched, b):
@@ -217,7 +217,7 @@ def emit_fusion(
             needed = propagate(m, sched)
             ovals = [
                 _adapt(vals[o.id], o, stored[o.id], ns, b)
-                for o, ns in zip(m.operands, needed)
+                for o, ns in zip(m.operands, needed, strict=False)
             ]
             v = _emit_instr(m, sched, ovals, b)
             entry = plan.entries.get(m.id)
@@ -266,7 +266,7 @@ def _store_chunk(ref, instr: Instruction, sched: Sched, v, b: int):
         return
     starts = _starts(instr.shape, sched, b)
     cs = chunk_shape(instr.shape, sched)
-    ref[tuple(slice(s, s + c) for s, c in zip(starts, cs))] = v
+    ref[tuple(slice(s, s + c) for s, c in zip(starts, cs, strict=False))] = v
 
 
 def emit_stitched_fusion(
@@ -351,7 +351,7 @@ def emit_stitched_fusion(
                     else:
                         needed = propagate(m, sched)
                         ovals = []
-                        for o, ns in zip(m.operands, needed):
+                        for o, ns in zip(m.operands, needed, strict=False):
                             if o.id in vals:
                                 ov = _adapt(vals[o.id], o, stored[o.id], ns, b)
                             else:

@@ -76,8 +76,18 @@ class StitchOptions:
     # separately, like ``donate_params``.  None = single-device compile;
     # every pre-existing cache key stays byte-identical.
     mesh_axes: Optional[Tuple[Tuple[str, int], ...]] = None
+    # Pass-boundary verification (core/verify.py): "off" = no checks at
+    # all, "checkpoint" (default) = verify the finished artifact once after
+    # FinalizePass, "strict" = verify after every pass so a violation names
+    # the pass that introduced it.  The REPRO_VERIFY environment variable
+    # overrides this at compile time (CI forces strict without touching
+    # call sites).  Runtime/compile-policy only — like ``jit_replay``,
+    # deliberately NOT part of the kernel-cache options fingerprint (it
+    # changes what gets checked, never what is tuned or emitted).
+    verify: str = "checkpoint"
 
     VALID_PLANNERS = ("cost", "greedy")
+    VALID_VERIFY = ("off", "checkpoint", "strict")
 
     def __post_init__(self):
         self.validate()
@@ -89,6 +99,11 @@ class StitchOptions:
             raise ValueError(
                 f"unknown planner {self.planner!r}; valid choices: "
                 f"{', '.join(self.VALID_PLANNERS)}"
+            )
+        if self.verify not in self.VALID_VERIFY:
+            raise ValueError(
+                f"unknown verify level {self.verify!r}; valid choices: "
+                f"{', '.join(self.VALID_VERIFY)}"
             )
         for name in ("vmem_limit", "replicate_limit", "max_blocks",
                      "ew_footprint_limit", "max_fusion_ops",
@@ -208,6 +223,14 @@ class CompileStats:
     collective_time_s: float = 0.0
     collective_breaks_spanned: int = 0
     sharded_instrs: int = 0
+    # Pass-boundary verifier accounting (core/verify.py): the resolved
+    # level this compile ran under (REPRO_VERIFY may override the option),
+    # boundaries checked, warning-severity diagnostics (errors raise), and
+    # the total verification time — also surfaced as pass_times["verify"].
+    verify_mode: str = "off"
+    verify_boundaries: int = 0
+    verify_warnings: int = 0
+    verify_time_s: float = 0.0
 
     @property
     def replay_dispatch_reduction(self) -> int:

@@ -327,12 +327,12 @@ class _JitSegment:
 
         def seg(*vals):
             counter()                # runs only while tracing
-            local: Dict[int, object] = dict(zip(in_slots, vals))
+            local: Dict[int, object] = dict(zip(in_slots, vals, strict=False))
             for step in steps:
                 args = [local[s] for s in step.arg_slots]
                 if type(step) is _KernelStep:
                     outs = jax.lax.optimization_barrier(step.kernel(*args))
-                    for s, o in zip(step.out_slots, outs):
+                    for s, o in zip(step.out_slots, outs, strict=False):
                         local[s] = o
                 else:
                     local[step.out_slot] = jax.lax.optimization_barrier(
@@ -552,7 +552,7 @@ class ExecutionPlan:
         buf: List[Optional[object]] = list(self._template)
         for (name, slot, dtype, shape), v in zip(
             self._param_binds, param_vals
-        ):
+        , strict=False):
             buf[slot] = jax.lax.optimization_barrier(
                 jnp.asarray(v, dtype=dtype)
             )
@@ -560,10 +560,10 @@ class ExecutionPlan:
             args = [buf[s] for s in step.arg_slots]
             if type(step) is _KernelStep:
                 outs = jax.lax.optimization_barrier(step.kernel(*args))
-                for s, o in zip(step.out_slots, outs):
+                for s, o in zip(step.out_slots, outs, strict=False):
                     buf[s] = o
             elif type(step) is _LoopStep:
-                for s, o in zip(step.out_slots, step.run_nested(args)):
+                for s, o in zip(step.out_slots, step.run_nested(args), strict=False):
                     buf[s] = o
             else:
                 buf[step.out_slot] = jax.lax.optimization_barrier(
@@ -591,16 +591,16 @@ class ExecutionPlan:
         buf = list(self._template)
         for (name, slot, dtype, shape), v in zip(
             self._param_binds, self._bind_feeds(feeds)
-        ):
+        , strict=False):
             buf[slot] = v
         for step in self.steps:
             if type(step) is _KernelStep:
                 outs = step.kernel(*[buf[s] for s in step.arg_slots])
-                for s, o in zip(step.out_slots, outs):
+                for s, o in zip(step.out_slots, outs, strict=False):
                     buf[s] = o
             elif type(step) is _LoopStep:
                 outs = step.run_eager([buf[s] for s in step.arg_slots])
-                for s, o in zip(step.out_slots, outs):
+                for s, o in zip(step.out_slots, outs, strict=False):
                     buf[s] = o
             else:
                 buf[step.out_slot] = apply_op(
@@ -628,7 +628,7 @@ class ExecutionPlan:
         """
         vals = self._bind_feeds(feeds)
         buf = list(self._template)
-        for (name, slot, dtype, shape), v in zip(self._param_binds, vals):
+        for (name, slot, dtype, shape), v in zip(self._param_binds, vals, strict=False):
             buf[slot] = v
         with warnings.catch_warnings():
             # donation on backends without aliasing support (CPU) only warns
@@ -640,7 +640,7 @@ class ExecutionPlan:
                     outs = seg.run_traced(
                         [buf[s] for s in seg.arg_slots], self._count_trace
                     )
-                    for s, o in zip(seg.out_slots, outs):
+                    for s, o in zip(seg.out_slots, outs, strict=False):
                         buf[s] = o
                     for s in seg.release:
                         buf[s] = None
@@ -648,7 +648,7 @@ class ExecutionPlan:
                 if seg.fn is None:
                     seg.build(self._count_trace)
                 outs = seg.fn(*[buf[s] for s in seg.in_slots])
-                for s, o in zip(seg.out_slots, outs):
+                for s, o in zip(seg.out_slots, outs, strict=False):
                     buf[s] = o
                 for s in seg.released:
                     buf[s] = None
@@ -707,7 +707,7 @@ class StitchedExecutable:
             for name, _, _, _ in ep._param_binds
         )
         outs = self.out_layouts or [None] * len(ep._root_binds)
-        out_specs = tuple(layout_to_pspec(l) for l in outs)
+        out_specs = tuple(layout_to_pspec(lay) for lay in outs)
 
         def run(*vals):
             return tuple(ep.trace_steps(list(vals)))
@@ -722,7 +722,7 @@ class StitchedExecutable:
             return tuple(local)
         sizes = {str(a): int(self.mesh.shape[a]) for a in self.mesh.axis_names}
         out = []
-        for d, e in zip(local, lay):
+        for d, e in zip(local, lay, strict=False):
             g = 1
             for a in e or ():
                 g *= sizes.get(a, 1)
@@ -746,7 +746,7 @@ class StitchedExecutable:
             vals.append(v)
         outs = self._sharded_fn(*vals)
         ep.stats.traced_calls += 1
-        return {name: o for (name, _), o in zip(ep._root_binds, outs)}
+        return {name: o for (name, _), o in zip(ep._root_binds, outs, strict=False)}
 
     def launch_stats(self) -> LaunchStats:
         st = LaunchStats()

@@ -212,6 +212,10 @@ class FusionPlan:
         return sum(1 for s in self.standalone if s.is_collective)
 
 
+def _always_consistent(roots: List[Instruction], members: List[Instruction]) -> bool:
+    return True
+
+
 @dataclass
 class FusionConfig:
     fuse_dot: bool = True                 # user decision, paper §2.1
@@ -220,7 +224,7 @@ class FusionConfig:
     # SchdConsistent(roots, tentative_members) -> bool.  Injected by the
     # compiler; defaults to permissive for structural tests.
     consistency: Callable[[List[Instruction], List[Instruction]], bool] = (
-        lambda roots, members: True
+        _always_consistent
     )
     # "cost": candidate-partition exploration under the LatencyModel (with
     # the greedy result as the floor).  "greedy": the paper's Algorithm 1
@@ -452,8 +456,8 @@ def subgraph_fuse(
     # The roof layer's NON-library ops are fusable (only the library call
     # itself is a boundary); constant-like producers get a final absorption
     # pass below, unbounded by roofs.
-    for l in range(curr_span + 1, roof + 1):
-        for hlo in layer_map.get(l, ()):
+    for lvl in range(curr_span + 1, roof + 1):
+        for hlo in layer_map.get(lvl, ()):
             if hlo.id in assigned or hlo in fused:
                 continue
             if not fusable_member(hlo, cfg.fuse_dot):
@@ -835,7 +839,7 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
                 assigned.add(m.id)
             greedy_fusion_count += 1
             groups, costs = _choose_partition(members, scorer, cfg, stats)
-            for g, c in zip(groups, costs):
+            for g, c in zip(groups, costs, strict=False):
                 fusions.append(
                     _commit_fusion(g, f"f{len(fusions)}", c, scorer)
                 )
@@ -859,7 +863,7 @@ def deep_fuse(module: Module, cfg: Optional[FusionConfig] = None) -> FusionPlan:
             if not towers:
                 continue
             groups, costs = _choose_pack(towers, module, scorer, cfg, stats)
-            for g, c in zip(groups, costs):
+            for g, c in zip(groups, costs, strict=False):
                 fusions.append(
                     _commit_fusion(g, f"f{len(fusions)}", c, scorer)
                 )

@@ -217,32 +217,23 @@ class Module:
         return [i for i in self.instructions if not i.users]
 
     def verify(self) -> None:
-        seen = set()
-        for instr in self.instructions:
-            for op in instr.operands:
-                if op.id not in seen:
-                    raise ValueError(
-                        f"{instr.name}: operand {op.name} not defined before use"
-                    )
-            seen.add(instr.id)
-            _infer_checked(instr)
+        """Full IR well-formedness check, delegated to the verifier's IR
+        family (``core/verify.py``): def-before-use, storage order,
+        operand/user back-edge symmetry, unique ids, shape AND dtype
+        re-inference, attr-declared contracts.  Raises
+        ``VerificationError`` (a ``ValueError``) on the first batch of
+        violations."""
+        from .verify import VerificationError, verify_module
+
+        diags = [d for d in verify_module(self) if d.severity == "error"]
+        if diags:
+            raise VerificationError(diags)
 
     def __repr__(self):
         lines = [f"module {self.name} {{"]
         lines += [f"  {i!r}" for i in self.instructions]
         lines.append("}")
         return "\n".join(lines)
-
-
-def _infer_checked(instr: Instruction) -> None:
-    """Re-run shape inference and check it matches the recorded shape."""
-    shape = infer_shape(
-        instr.opcode, [o.shape for o in instr.operands], instr.attrs
-    )
-    if shape is not None and tuple(shape) != tuple(instr.shape):
-        raise ValueError(
-            f"{instr.name}: recorded shape {instr.shape} != inferred {shape}"
-        )
 
 
 def infer_shape(opcode, operand_shapes, attrs) -> Optional[Tuple[int, ...]]:
@@ -295,6 +286,33 @@ def infer_shape(opcode, operand_shapes, attrs) -> Optional[Tuple[int, ...]]:
         s[dim] //= g
         return tuple(s)
     raise ValueError(f"unknown opcode {opcode}")
+
+
+def infer_dtype(opcode, operand_dtypes, attrs) -> Optional[Any]:
+    """The dtype counterpart of ``infer_shape``: what dtype this opcode
+    produces from its operands, or None where the dtype is intrinsic or
+    attr-declared (parameter/constant/iota, call/get, ``convert`` casts).
+
+    Mirrors the ``GraphBuilder`` conventions: compare fns yield bool,
+    ``select`` follows its value operands, ``dot``/``concat``/``gather``
+    and every shape op follow their primary operand.
+    """
+    if opcode in ("parameter", "constant", "iota", "call", "get"):
+        return None  # intrinsic / declared in attrs
+    if opcode == "elementwise":
+        fn = attrs.get("fn")
+        if fn in _COMPARE_FNS:
+            return np.dtype(bool)
+        if fn == "convert":
+            return None  # cast target IS the instruction's own dtype
+        return np.dtype(operand_dtypes[0])
+    if opcode == "select":
+        return np.dtype(operand_dtypes[1])
+    if not operand_dtypes:
+        return None
+    # reshape/bitcast/transpose/broadcast/reduce/concat/gather/dot and the
+    # collectives all carry their primary operand's dtype through
+    return np.dtype(operand_dtypes[0])
 
 
 # --------------------------------------------------------------------------

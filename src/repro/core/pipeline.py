@@ -58,6 +58,13 @@ class PlannedFusion:
     is_representative: bool          # this instance built the entry
     kernel: Optional[StitchedKernel] = None
     tuned_from_disk: bool = False
+    # Signature provenance for the verifier's cache-collision audit
+    # (EXEC005): the content hash of the fusion body as SchedulePass hashed
+    # it, and whether memory feedback later shrank this instance — a shrunk
+    # fusion keeps its pre-shrink signature by design (``kept_members``
+    # records the shrink), so the audit skips re-hashing it.
+    raw_signature: Optional[str] = None
+    shrunk: bool = False
     # Measured-store key for this fusion (options salt + the signature the
     # planner SCORED — see FusedComputation.scored_signature).  Recorded by
     # SchedulePass so AutotunePass files measurements under the exact key
@@ -124,10 +131,39 @@ class PassPipeline:
         self.passes = list(passes)
 
     def run(self, state: CompilationState) -> CompilationState:
+        from .verify import ERROR, VerificationError, resolve_verify_mode, verify_state
+
+        mode = resolve_verify_mode(state.options)
+        verify_time = 0.0
+        boundaries = 0
+        warnings = 0
         for p in self.passes:
             t0 = time.perf_counter()
             p.run(state)
             state.pass_times[p.name] = time.perf_counter() - t0
+            # "off" does zero verification work (no pass_times["verify"]
+            # entry either — the no-overhead contract is testable);
+            # "checkpoint" verifies the finished artifact once; "strict"
+            # checks every boundary so a violation names the pass that
+            # introduced it.
+            if mode == "off" or (mode == "checkpoint" and p is not self.passes[-1]):
+                continue
+            v0 = time.perf_counter()
+            diags = verify_state(state, pass_name=p.name)
+            verify_time += time.perf_counter() - v0
+            boundaries += 1
+            errors = [d for d in diags if d.severity == ERROR]
+            warnings += len(diags) - len(errors)
+            if errors:
+                state.pass_times["verify"] = verify_time
+                raise VerificationError(errors)
+        if mode != "off":
+            state.pass_times["verify"] = verify_time
+            if state.stats is not None:
+                state.stats.verify_mode = mode
+                state.stats.verify_boundaries = boundaries
+                state.stats.verify_warnings = warnings
+                state.stats.verify_time_s = verify_time
         return state
 
 
@@ -351,7 +387,10 @@ class SchedulePass(Pass):
                 entry = cache.get(sig)
                 if entry is not None:
                     state.planned.append(
-                        PlannedFusion(fusion, entry, False, measure_sig=msig)
+                        PlannedFusion(
+                            fusion, entry, False,
+                            measure_sig=msig, raw_signature=raw,
+                        )
                     )
                     continue
             tuned, from_disk = self._tune(state, fusion, sig)
@@ -370,7 +409,10 @@ class SchedulePass(Pass):
                 if opts.dedup_kernels:
                     cache.put(entry)
                 state.planned.append(
-                    PlannedFusion(fusion, entry, True, measure_sig=msig)
+                    PlannedFusion(
+                        fusion, entry, True,
+                        measure_sig=msig, raw_signature=raw,
+                    )
                 )
                 continue
             roots = fusion.roots
@@ -389,6 +431,7 @@ class SchedulePass(Pass):
                 PlannedFusion(
                     fusion, entry, True,
                     tuned_from_disk=from_disk, measure_sig=msig,
+                    raw_signature=raw,
                 )
             )
 
@@ -416,7 +459,7 @@ class SchedulePass(Pass):
                     sol = resolve_schedules(
                         members,
                         roots,
-                        {r.id: s for r, s in zip(roots, hint)},
+                        {r.id: s for r, s in zip(roots, hint, strict=False)},
                         opts.replicate_limit,
                     )
                     return TunedPlan(sol, score(members, sol, state.library)), True
@@ -544,6 +587,8 @@ class MemoryPass(Pass):
                 continue
             # success
             state.demoted.extend(dropped)
+            if dropped:
+                p.shrunk = True
             p.fusion = fusion
             entry.solution = tuned.solution
             entry.cost_s = tuned.cost_s
@@ -599,6 +644,7 @@ class CodegenPass(Pass):
                 kept_n = entry.kept_members or len(p.fusion.members)
                 if kept_n < len(p.fusion.members):
                     state.demoted.extend(p.fusion.members[kept_n:])
+                    p.shrunk = True
                     p.fusion = FusedComputation(
                         p.fusion.members[:kept_n], name=p.fusion.name
                     )

@@ -26,10 +26,8 @@ needs that the paper leaves implicit:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from .ir import COLLECTIVE_OPCODES, Instruction
 
@@ -340,7 +338,7 @@ def resolve_schedules(
                 # member never reached from a root yet — replicate
                 changed |= assign(instr, REPLICATED)
             sched = assignment[instr.id]
-            for o, osched in zip(instr.operands, propagate(instr, sched)):
+            for o, osched in zip(instr.operands, propagate(instr, sched), strict=False):
                 changed |= assign(o, osched)
         if not changed:
             break
@@ -349,7 +347,7 @@ def resolve_schedules(
     # the member's schedule (equal or replicated).
     for instr in members:
         sched = assignment[instr.id]
-        for o, osched in zip(instr.operands, propagate(instr, sched)):
+        for o, osched in zip(instr.operands, propagate(instr, sched), strict=False):
             got = assignment[o.id]
             if got != osched and got.kind != "replicated":
                 raise Unsatisfiable(

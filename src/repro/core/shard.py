@@ -28,7 +28,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .ir import COLLECTIVE_OPCODES, Instruction, Module
+from .ir import COLLECTIVE_OPCODES, Module
 
 #: one entry per dim: None (unsharded) or a tuple of mesh axis names
 Layout = Tuple[Optional[Tuple[str, ...]], ...]
@@ -109,7 +109,7 @@ def _merge(a, b, where: str):
     if len(a) != len(b):
         return None
     out = []
-    for da, db in zip(a, b):
+    for da, db in zip(a, b, strict=False):
         if da is None or db is None:
             # replicated op sharded: the sharded interpretation wins (a
             # replicated operand holds the same slice-compatible values on
@@ -125,21 +125,21 @@ def _merge(a, b, where: str):
     return tuple(out)
 
 
-def propagate_layouts(
+def derive_layouts(
     module: Module,
     mesh_axes: Sequence[Tuple[str, int]],
     param_layouts: Optional[Dict[str, Layout]] = None,
-) -> Dict[str, int]:
-    """Derive and stamp a shard layout for every instruction.
+) -> Tuple[Dict[int, Optional[Layout]], Dict[int, frozenset], Dict[str, int]]:
+    """Derive (without stamping) a shard layout for every instruction.
 
-    ``mesh_axes`` is the (name, size) tuple the plan will run on;
-    ``param_layouts`` maps parameter names to layouts (missing = replicated).
-    Stamps ``attrs["shard"]`` only when the layout is known and non-trivial
-    (unsharded compiles stay byte-identical in every signature), and
-    ``attrs["partial"]`` with the mesh axes a value is a pending partial sum
-    over.  Raises ``ValueError`` on layout conflicts, collectives over axes
-    the mesh does not have, or group sizes that disagree with the mesh.
-    Returns counters for ``CompileStats``.
+    The pure half of ``propagate_layouts``: walks the module once and
+    returns ``(layouts, partial, counters)`` — instruction id to layout
+    (None = unknown), instruction id to pending partial-sum axes (only ids
+    with a non-empty set appear), and the ``CompileStats`` counters.  The
+    verifier calls this directly so it can compare a fresh derivation
+    against the stamped attrs without mutating anything.  Raises
+    ``ValueError`` on layout conflicts, collectives over axes the mesh does
+    not have, or group sizes that disagree with the mesh.
     """
     axis_size = {name: int(size) for name, size in mesh_axes}
     param_layouts = param_layouts or {}
@@ -251,17 +251,17 @@ def propagate_layouts(
                     # each shard reduced only its local slice: partial sum
                     in_partial = in_partial | reduced_axes
         elif op == "dot":
-            l, r = layouts.get(ops[0].id), layouts.get(ops[1].id)
-            if l is None or r is None:
+            lhs, rhs = layouts.get(ops[0].id), layouts.get(ops[1].id)
+            if lhs is None or rhs is None:
                 lay = None
             else:
-                batch = _merge(l[:-2], r[:-2], instr.name)
+                batch = _merge(lhs[:-2], rhs[:-2], instr.name)
                 lay = (
                     None
                     if batch is None
-                    else batch + (l[-2], r[-1])
+                    else batch + (lhs[-2], rhs[-1])
                 )
-                contracted = set(l[-1] or ()) | set(r[-2] or ())
+                contracted = set(lhs[-1] or ()) | set(rhs[-2] or ())
                 if contracted:
                     in_partial = in_partial | contracted
         elif op == "concat":
@@ -282,9 +282,41 @@ def propagate_layouts(
         layouts[instr.id] = lay
         if in_partial:
             partial[instr.id] = in_partial
-            instr.attrs["partial"] = tuple(sorted(in_partial))
         if lay is not None and not is_trivial_layout(lay):
             n_sharded += 1
-            instr.attrs["shard"] = lay
 
-    return {"sharded_instrs": n_sharded, "collective_ops": n_collectives}
+    counters = {"sharded_instrs": n_sharded, "collective_ops": n_collectives}
+    return layouts, partial, counters
+
+
+def propagate_layouts(
+    module: Module,
+    mesh_axes: Sequence[Tuple[str, int]],
+    param_layouts: Optional[Dict[str, Layout]] = None,
+) -> Dict[str, int]:
+    """Derive and stamp a shard layout for every instruction.
+
+    ``mesh_axes`` is the (name, size) tuple the plan will run on;
+    ``param_layouts`` maps parameter names to layouts (missing = replicated).
+    Stamps ``attrs["shard"]`` only when the layout is known and non-trivial
+    (unsharded compiles stay byte-identical in every signature), and
+    ``attrs["partial"]`` with the mesh axes a value is a pending partial sum
+    over; stale stamps from an earlier propagation are cleared, so the attrs
+    always mirror THIS derivation (the verifier re-derives and compares).
+    Raises ``ValueError`` on layout conflicts, collectives over axes the
+    mesh does not have, or group sizes that disagree with the mesh.
+    Returns counters for ``CompileStats``.
+    """
+    layouts, partial, counters = derive_layouts(module, mesh_axes, param_layouts)
+    for instr in module.instructions:
+        in_partial = partial.get(instr.id)
+        if in_partial:
+            instr.attrs["partial"] = tuple(sorted(in_partial))
+        else:
+            instr.attrs.pop("partial", None)
+        lay = layouts.get(instr.id)
+        if lay is not None and not is_trivial_layout(lay):
+            instr.attrs["shard"] = lay
+        else:
+            instr.attrs.pop("shard", None)
+    return counters

@@ -30,7 +30,7 @@ import numpy as np
 from .fusion import FusedComputation
 from .memory import MemoryPlan
 from .perf_library import JsonStore
-from .schedule import ROW, Sched, ScheduleSolution
+from .schedule import Sched, ScheduleSolution
 
 
 def _canon_value(v):

@@ -12,7 +12,7 @@ never crosses an LC-layer (§3.2).
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from .ir import Instruction, Module
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from .ir import Instruction
 from .latency import is_trivial as _is_trivial  # shared convention (latency.py)
@@ -110,7 +110,7 @@ def _tune_multi(members, roots, lib, max_blocks, replicate_limit, max_combos):
             itertools.product(*[bb[b] for bb in per_root]), max_combos
         )
         for combo in combos:
-            rs = {r.id: s for r, s in zip(roots, combo)}
+            rs = {r.id: s for r, s in zip(roots, combo, strict=False)}
             try:
                 sol = resolve_schedules(members, roots, rs, replicate_limit)
             except Unsatisfiable:

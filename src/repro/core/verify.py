@@ -1,0 +1,934 @@
+"""Pass-boundary StitchIR verifier and ExecutionPlan linter.
+
+Nine PRs of compiler invariants — fusion groups must not cross an LC layer
+(paper §3.2), stitched phases must each be schedule-consistent, collectives
+must never sit inside a kernel body, shard layouts must close their partial
+sums before a root, donated buffer slots must be dead — and until now the
+only machine-checked one was ``Module.verify()``'s shape-only
+def-before-use pass.  This module is the static-analysis backstop: after a
+pass runs, ``verify_state`` re-derives every invariant the pipeline is
+supposed to maintain and reports violations as structured ``Diagnostic``
+records naming the rule, the offending instruction/slot, and the pass
+boundary that introduced the breakage — so a broken plan fails loudly at
+its source instead of as a wrong number three subsystems later.
+
+Three analysis families:
+
+* **IR well-formedness** (``IR0xx``, ``verify_module``): def-before-use,
+  topological storage order, operand/user back-edge symmetry, unique ids,
+  shape AND dtype re-inference, and the attr-declared shapes of the
+  ``call``/``get``/``constant`` opcodes that ``infer_shape`` skips.
+  ``Module.verify()`` delegates here.
+* **Plan lint** (``PLAN0xx``): fusion groups are acyclic single-DAGs that
+  never span an LC layer (``core/span.py`` roofs), never contain a
+  collective / library call / non-scalar constant, every instruction is
+  covered exactly once, each planned entry's schedule solution is sound
+  (the ``resolve_schedules`` readability contract, per phase for stitched
+  plans) and its memory plan fits the VMEM budget, and — on sharded
+  compiles — the stamped shard/partial attrs agree with a fresh
+  ``derive_layouts`` run with no partial sum reaching a root unclosed.
+* **ExecutionPlan lint** (``EXEC0xx``, ``verify_execution_plan``): a
+  dataflow walk over the flat slot table proving every slot is written
+  before read and never read after its eager-release point, that releases
+  are sane (no root released, no double release), that jit-segment
+  ``donate_argnums`` only name slots dead after the segment (parameter and
+  template slots never donated), plus a KernelCache signature-collision
+  audit re-hashing committed entries against their lowered bodies.
+
+``PassPipeline.run`` invokes ``verify_state`` according to
+``StitchOptions.verify``: ``"off"`` (no work at all), ``"checkpoint"``
+(after FinalizePass only — the default), ``"strict"`` (after every pass).
+The ``REPRO_VERIFY`` environment variable overrides the option so CI can
+force strict without touching call sites.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from . import span as span_lib
+from .fusion import constant_like
+from .ir import (
+    COLLECTIVE_OPCODES,
+    Instruction,
+    Module,
+    infer_dtype,
+    infer_shape,
+)
+from .schedule import Unsatisfiable, blocks_of, propagate
+
+ERROR = "error"
+WARNING = "warning"
+
+VERIFY_MODES = ("off", "checkpoint", "strict")
+VERIFY_ENV_VAR = "REPRO_VERIFY"
+
+#: rule id -> one-line description (the README table renders from this)
+RULES: Dict[str, str] = {
+    "IR001": "operand is not an instruction of this module (dangling def)",
+    "IR002": "operand stored after its user (topological order broken)",
+    "IR003": "operand/user back-edges are asymmetric",
+    "IR004": "duplicate instruction id in one module",
+    "IR005": "recorded shape disagrees with shape re-inference",
+    "IR006": "recorded dtype disagrees with dtype re-inference",
+    "IR007": "attr-declared shape/dtype contract broken (call/get/constant)",
+    "IR008": "duplicate parameter name",
+    "PLAN001": "fusion group is cyclic through outside instructions",
+    "PLAN002": "fusion component spans an LC layer roof",
+    "PLAN003": "forbidden member in a kernel body (collective/library/loop)",
+    "PLAN004": "non-scalar constant inside a kernel body",
+    "PLAN005": "schedule solution unsound for its fusion",
+    "PLAN006": "memory plan exceeds the VMEM budget",
+    "PLAN007": "stamped shard layout disagrees with re-derivation",
+    "PLAN008": "partial sum reaches a module root unclosed",
+    "PLAN009": "instruction not covered exactly once by the plan",
+    "EXEC001": "slot read before written / written twice",
+    "EXEC002": "slot read after its eager-release point",
+    "EXEC003": "bad release (root slot, double release, never written)",
+    "EXEC004": "donated slot is protected or still live",
+    "EXEC005": "cache entry signature does not match its lowered body",
+}
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One structured verifier finding.
+
+    ``subject`` names the offending instruction / fusion / slot;
+    ``pass_name`` is the pass boundary the violation was detected at (empty
+    when the verifier ran standalone, e.g. via ``Module.verify``).
+    """
+
+    severity: str                 # ERROR | WARNING
+    rule: str                     # key into RULES
+    message: str
+    subject: str = ""
+    pass_name: str = ""
+
+    def __str__(self) -> str:
+        where = f" [{self.subject}]" if self.subject else ""
+        origin = f" (after pass {self.pass_name!r})" if self.pass_name else ""
+        return f"{self.severity} {self.rule}{where}: {self.message}{origin}"
+
+
+class VerificationError(ValueError):
+    """Raised when verification finds error-severity diagnostics.
+
+    Subclasses ``ValueError`` so every pre-existing caller of
+    ``Module.verify()`` (which raised bare ValueErrors) keeps working.
+    """
+
+    def __init__(self, diagnostics: Sequence[Diagnostic]):
+        self.diagnostics = list(diagnostics)
+        shown = "\n".join(f"  {d}" for d in self.diagnostics[:12])
+        more = len(self.diagnostics) - 12
+        if more > 0:
+            shown += f"\n  ... and {more} more"
+        super().__init__(
+            f"{len(self.diagnostics)} verifier diagnostic(s):\n{shown}"
+        )
+
+
+def resolve_verify_mode(options) -> str:
+    """The effective verify level: ``REPRO_VERIFY`` env override first,
+    then ``options.verify``.  The env var exists so CI can force strict
+    across an entire test lane without touching any call site."""
+    env = os.environ.get(VERIFY_ENV_VAR)
+    if env:
+        if env not in VERIFY_MODES:
+            raise ValueError(
+                f"{VERIFY_ENV_VAR}={env!r}: valid values are "
+                f"{', '.join(VERIFY_MODES)}"
+            )
+        return env
+    mode = getattr(options, "verify", "checkpoint")
+    if mode not in VERIFY_MODES:
+        raise ValueError(
+            f"options.verify={mode!r}: valid values are "
+            f"{', '.join(VERIFY_MODES)}"
+        )
+    return mode
+
+
+# --------------------------------------------------------------------------
+# Family 1: IR well-formedness
+# --------------------------------------------------------------------------
+
+
+def verify_module(
+    module: Module, pass_name: str = "", _prefix: str = ""
+) -> List[Diagnostic]:
+    """IR well-formedness diagnostics for one module (and, recursively, the
+    body modules of its ``call`` loops)."""
+    diags: List[Diagnostic] = []
+
+    def err(rule: str, subject: str, message: str) -> None:
+        diags.append(
+            Diagnostic(ERROR, rule, message, _prefix + subject, pass_name)
+        )
+
+    index: Dict[int, int] = {}
+    for pos, instr in enumerate(module.instructions):
+        if instr.id in index:
+            err(
+                "IR004",
+                instr.name,
+                f"id {instr.id} already used by "
+                f"{module.instructions[index[instr.id]].name}",
+            )
+        else:
+            index[instr.id] = pos
+
+    param_names: Set[str] = set()
+    for pos, instr in enumerate(module.instructions):
+        if instr.opcode == "parameter":
+            if instr.name in param_names:
+                err("IR008", instr.name, "duplicate parameter name")
+            param_names.add(instr.name)
+
+        # -- def-before-use + topological storage order --------------------
+        for op in instr.operands:
+            at = index.get(op.id)
+            if at is None:
+                err(
+                    "IR001",
+                    instr.name,
+                    f"operand {op.name} is not an instruction of module "
+                    f"{module.name!r}",
+                )
+            elif at >= pos:
+                err(
+                    "IR002",
+                    instr.name,
+                    f"operand {op.name} stored at position {at}, after its "
+                    f"user at {pos}",
+                )
+
+        # -- operand/user back-edge symmetry --------------------------------
+        for op in set(instr.operands):
+            uses = sum(1 for o in instr.operands if o.id == op.id)
+            backs = sum(1 for u in op.users if u.id == instr.id)
+            if uses != backs:
+                err(
+                    "IR003",
+                    instr.name,
+                    f"lists operand {op.name} {uses}x but appears in its "
+                    f"users {backs}x",
+                )
+        for u in instr.users:
+            if u.id not in index:
+                err(
+                    "IR003",
+                    instr.name,
+                    f"user {u.name} is not an instruction of module "
+                    f"{module.name!r} (stale back-edge)",
+                )
+
+        diags.extend(
+            Diagnostic(ERROR, rule, msg, _prefix + instr.name, pass_name)
+            for rule, msg in _check_instr_types(instr)
+        )
+
+    # recurse into loop bodies: their invariants hold or break independently
+    for instr in module.instructions:
+        if instr.opcode == "call":
+            body = instr.attrs.get("body")
+            if isinstance(body, Module):
+                diags.extend(
+                    verify_module(
+                        body, pass_name, _prefix=f"{_prefix}{instr.name}/"
+                    )
+                )
+    return diags
+
+
+def _check_instr_types(instr: Instruction) -> List[Tuple[str, str]]:
+    """Shape/dtype re-inference plus the attr-declared contracts of the
+    opcodes ``infer_shape`` skips.  Returns (rule, message) pairs."""
+    out: List[Tuple[str, str]] = []
+    try:
+        shape = infer_shape(
+            instr.opcode, [o.shape for o in instr.operands], instr.attrs
+        )
+    except (ValueError, AssertionError, KeyError, IndexError) as e:
+        out.append(("IR005", f"shape inference failed: {e}"))
+        shape = None
+    if shape is not None and tuple(shape) != tuple(instr.shape):
+        out.append(
+            ("IR005", f"recorded shape {instr.shape} != inferred {tuple(shape)}")
+        )
+    try:
+        dtype = infer_dtype(
+            instr.opcode, [o.dtype for o in instr.operands], instr.attrs
+        )
+    except (ValueError, KeyError, IndexError) as e:
+        out.append(("IR006", f"dtype inference failed: {e}"))
+        dtype = None
+    if dtype is not None and np.dtype(dtype) != np.dtype(instr.dtype):
+        out.append(
+            (
+                "IR006",
+                f"recorded dtype {np.dtype(instr.dtype).name} != inferred "
+                f"{np.dtype(dtype).name}",
+            )
+        )
+
+    a = instr.attrs
+    if instr.opcode == "constant":
+        value = a.get("value")
+        if value is None:
+            out.append(("IR007", "constant without a value attr"))
+        elif tuple(np.shape(value)) != tuple(instr.shape):
+            out.append(
+                (
+                    "IR007",
+                    f"value shape {np.shape(value)} != recorded {instr.shape}",
+                )
+            )
+    elif instr.opcode == "call":
+        out.extend(_check_call(instr))
+    elif instr.opcode == "get":
+        src = instr.operands[0] if instr.operands else None
+        if src is None or src.opcode != "call":
+            out.append(("IR007", "get must project a call instruction"))
+        else:
+            idx = int(a.get("index", -1))
+            shapes = src.attrs.get("out_shapes", ())
+            dtypes = src.attrs.get("out_dtypes", ())
+            if not 0 <= idx < len(shapes):
+                out.append(
+                    ("IR007", f"index {idx} out of range for {len(shapes)} outputs")
+                )
+            else:
+                if tuple(shapes[idx]) != tuple(instr.shape):
+                    out.append(
+                        (
+                            "IR007",
+                            f"recorded shape {instr.shape} != declared "
+                            f"out_shapes[{idx}] {tuple(shapes[idx])}",
+                        )
+                    )
+                if np.dtype(dtypes[idx]) != np.dtype(instr.dtype):
+                    out.append(
+                        (
+                            "IR007",
+                            f"recorded dtype {np.dtype(instr.dtype).name} != "
+                            f"declared out_dtypes[{idx}]",
+                        )
+                    )
+    return out
+
+
+def _check_call(instr: Instruction) -> List[Tuple[str, str]]:
+    """The ``call`` loop contract: declared outputs index real body roots,
+    carries close their shape loop, xs stack over the trip count."""
+    out: List[Tuple[str, str]] = []
+    a = instr.attrs
+    body = a.get("body")
+    if not isinstance(body, Module):
+        return [("IR007", "call without a body module")]
+    try:
+        nc, k = int(a["num_consts"]), int(a["num_carry"])
+        trip = int(a["trip_count"])
+        order = tuple(a["out_order"])
+        shapes = tuple(a["out_shapes"])
+        dtypes = tuple(a["out_dtypes"])
+    except (KeyError, TypeError, ValueError) as e:
+        return [("IR007", f"call attrs incomplete: {e}")]
+
+    if not (len(order) == len(shapes) == len(dtypes)):
+        out.append(
+            (
+                "IR007",
+                f"out_order/out_shapes/out_dtypes lengths disagree: "
+                f"{len(order)}/{len(shapes)}/{len(dtypes)}",
+            )
+        )
+        return out
+    roots = body.roots
+    for j in order:
+        if not 0 <= j < len(roots):
+            out.append(
+                ("IR007", f"out_order entry {j} out of range for {len(roots)} body roots")
+            )
+            return out
+    if k > len(order):
+        out.append(("IR007", f"num_carry {k} > {len(order)} declared outputs"))
+        return out
+    if nc + k > len(instr.operands):
+        out.append(
+            (
+                "IR007",
+                f"num_consts+num_carry {nc + k} > {len(instr.operands)} operands",
+            )
+        )
+        return out
+    if tuple(instr.shape) != tuple(shapes[0]) or np.dtype(
+        instr.dtype
+    ) != np.dtype(dtypes[0]):
+        out.append(
+            ("IR007", "call instr shape/dtype must alias out_shapes[0]/out_dtypes[0]")
+        )
+    # carries: the init operand, the body root, and the declared output must
+    # agree — the loop feeds output j back as carry j every iteration
+    for i in range(k):
+        init = instr.operands[nc + i]
+        if tuple(init.shape) != tuple(shapes[i]):
+            out.append(
+                (
+                    "IR007",
+                    f"carry {i}: init {init.name} shape {init.shape} != "
+                    f"declared {tuple(shapes[i])}",
+                )
+            )
+        if tuple(roots[order[i]].shape) != tuple(shapes[i]):
+            out.append(
+                (
+                    "IR007",
+                    f"carry {i}: body root shape {roots[order[i]].shape} != "
+                    f"declared {tuple(shapes[i])}",
+                )
+            )
+    # ys: stacked per-iteration body roots — (trip,) + root shape
+    for j in range(k, len(order)):
+        want = (trip,) + tuple(roots[order[j]].shape)
+        if tuple(shapes[j]) != want:
+            out.append(
+                (
+                    "IR007",
+                    f"ys output {j}: declared {tuple(shapes[j])} != "
+                    f"(trip,)+root shape {want}",
+                )
+            )
+    # xs: sliced along the leading dim, one slice per iteration
+    for j, xs in enumerate(instr.operands[nc + k:]):
+        if not xs.shape or int(xs.shape[0]) != trip:
+            out.append(
+                (
+                    "IR007",
+                    f"xs operand {xs.name} leading dim "
+                    f"{xs.shape[:1] or '()'} != trip_count {trip}",
+                )
+            )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Family 2: plan lint
+# --------------------------------------------------------------------------
+
+
+def verify_fusion_groups(
+    fusions, standalone, module: Module, pass_name: str = ""
+) -> List[Diagnostic]:
+    """Structural lint of a fusion partition: acyclic groups, LC-layer
+    roofs, member legality, exactly-once coverage."""
+    from .fusion import _group_cycle
+
+    diags: List[Diagnostic] = []
+    span = span_lib.compute_spans(module)
+    lcs = span_lib.lc_spans(module, span)
+    max_span = max(span.values()) if span else 0
+
+    for f in fusions:
+        members = list(f.members)
+        if _group_cycle(set(members)):
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN001",
+                    "member union reaches itself through outside instructions",
+                    f.name, pass_name,
+                )
+            )
+        for m in members:
+            if m.is_collective:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN003",
+                        f"collective {m.name} inside a kernel body",
+                        f.name, pass_name,
+                    )
+                )
+            elif m.is_library_call or m.opcode in ("call", "get", "parameter"):
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN003",
+                        f"{m.opcode} {m.name} inside a kernel body",
+                        f.name, pass_name,
+                    )
+                )
+            elif m.opcode == "constant" and m.num_elements != 1:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN004",
+                        f"array constant {m.name} ({m.num_elements} elements) "
+                        "inside a kernel body — Pallas only inlines scalars",
+                        f.name, pass_name,
+                    )
+                )
+        # LC roofs apply per weakly-connected component of member-to-member
+        # operand edges: a horizontal merge may legally pack INDEPENDENT
+        # towers from opposite sides of an LC layer into one kernel, but no
+        # single dependent chain may cross a roof.  Constant-like members
+        # are exempt — absorption is unbounded by design (paper §3.2).
+        for comp in _member_components(members):
+            spans_c = [span[m.id] for m in comp if m.id in span]
+            if not spans_c:
+                continue
+            roof = span_lib.roof_for(min(spans_c), lcs, max_span)
+            if max(spans_c) > roof:
+                names = ", ".join(m.name for m in comp[:4])
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN002",
+                        f"component [{names}...] spans layers "
+                        f"{min(spans_c)}..{max(spans_c)} past LC roof {roof}",
+                        f.name, pass_name,
+                    )
+                )
+
+    # exactly-once coverage of the non-trivial instruction universe
+    counts: Dict[int, int] = {}
+    by_id: Dict[int, Instruction] = {}
+    for f in fusions:
+        for m in f.members:
+            counts[m.id] = counts.get(m.id, 0) + 1
+            by_id[m.id] = m
+    for s in standalone:
+        counts[s.id] = counts.get(s.id, 0) + 1
+        by_id[s.id] = s
+    for instr in module.instructions:
+        if instr.opcode in ("parameter", "constant") or constant_like(instr):
+            continue
+        n = counts.get(instr.id, 0)
+        if n != 1:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN009",
+                    f"covered {n}x by the plan (want exactly once)",
+                    instr.name, pass_name,
+                )
+            )
+    return diags
+
+
+def _member_components(members) -> List[List[Instruction]]:
+    """Weakly-connected components of the member set under member-to-member
+    operand edges, with constant-like members dropped (they bridge towers
+    without schedule or layer constraints)."""
+    core = [m for m in members if not constant_like(m)]
+    ids = {m.id for m in core}
+    parent: Dict[int, int] = {m.id: m.id for m in core}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for m in core:
+        for o in m.operands:
+            if o.id in ids:
+                parent[find(m.id)] = find(o.id)
+    groups: Dict[int, List[Instruction]] = {}
+    for m in core:
+        groups.setdefault(find(m.id), []).append(m)
+    return list(groups.values())
+
+
+def _verify_solution(
+    members, solution, blocks: int, subject: str, pass_name: str
+) -> List[Diagnostic]:
+    """The ``resolve_schedules`` soundness contract, re-checked: every
+    member is assigned, chunked members agree with the launch grid, and
+    every operand is readable (equal schedule or replicated) under its
+    user's propagated requirement."""
+    diags: List[Diagnostic] = []
+    assignment = solution.assignment
+    for m in members:
+        sched = assignment.get(m.id)
+        if sched is None:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN005",
+                    f"member {m.name} has no schedule assignment",
+                    subject, pass_name,
+                )
+            )
+            continue
+        if sched.kind == "chunked" and blocks_of(m.shape, sched) != blocks:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN005",
+                    f"member {m.name}: {sched!r} yields "
+                    f"{blocks_of(m.shape, sched)} blocks, launch grid is "
+                    f"{blocks}",
+                    subject, pass_name,
+                )
+            )
+            continue
+        try:
+            needs = propagate(m, sched)
+        except Unsatisfiable as e:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN005",
+                    f"member {m.name}: no propagation under {sched!r}: {e}",
+                    subject, pass_name,
+                )
+            )
+            continue
+        for o, osched in zip(m.operands, needs, strict=False):
+            got = assignment.get(o.id)
+            if got is None:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN005",
+                        f"member {m.name}: operand {o.name} unassigned",
+                        subject, pass_name,
+                    )
+                )
+            elif got != osched and got.kind != "replicated":
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN005",
+                        f"member {m.name}: operand {o.name} has {got!r}, "
+                        f"needs {osched!r}",
+                        subject, pass_name,
+                    )
+                )
+    return diags
+
+
+def verify_planned_entries(state, pass_name: str = "") -> List[Diagnostic]:
+    """Per-entry lint: schedule-solution soundness (per phase for stitched
+    plans), VMEM budget, and the kernel-cache signature audit."""
+    from .pipeline import _options_fingerprint
+    from .signature import fusion_signature
+
+    diags: List[Diagnostic] = []
+    opts = state.options
+    salt = _options_fingerprint(opts)
+    for p in state.planned:
+        fusion, entry = p.fusion, p.entry
+
+        # -- signature-collision audit (EXEC005) ---------------------------
+        # Re-hash the lowered body against the signature recorded when the
+        # entry was committed.  Shrunk instances keep their PRE-shrink
+        # signature on purpose (the entry records kept_members instead), so
+        # only the salt check applies to them.
+        if p.raw_signature is not None:
+            if not p.shrunk and fusion_signature(fusion) != p.raw_signature:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "EXEC005",
+                        "fusion body no longer hashes to its committed "
+                        "signature",
+                        fusion.name, pass_name,
+                    )
+                )
+            if entry.signature != salt + p.raw_signature:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "EXEC005",
+                        "cache entry signature does not match this compile's "
+                        "options salt + body hash",
+                        fusion.name, pass_name,
+                    )
+                )
+
+        # Solution/memory checks describe the REPRESENTATIVE's instruction
+        # ids; hit instances share the entry and are covered through it.
+        if not p.is_representative:
+            continue
+        st = entry.stitched
+        if st is not None:
+            phase_ids = {m.id for ph in st.phases for m in ph.members}
+            member_ids = {m.id for m in fusion.members}
+            if phase_ids != member_ids:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN005",
+                        "stitched phases do not partition the member set "
+                        f"({len(phase_ids)} phase members vs "
+                        f"{len(member_ids)} fusion members)",
+                        fusion.name, pass_name,
+                    )
+                )
+            for k, ph in enumerate(st.phases):
+                diags.extend(
+                    _verify_solution(
+                        ph.members, ph.solution, ph.blocks,
+                        f"{fusion.name}/phase{k}", pass_name,
+                    )
+                )
+            # interfaces = values produced in one phase, consumed later
+            phase_of = {
+                m.id: k for k, ph in enumerate(st.phases) for m in ph.members
+            }
+            want = {
+                m.id
+                for ph in st.phases
+                for m in ph.members
+                if any(
+                    phase_of.get(u.id, -1) > phase_of[m.id] for u in m.users
+                )
+            }
+            got = {i.id for i in st.interfaces}
+            if want != got:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN005",
+                        f"staged interfaces disagree with the phase dataflow "
+                        f"({len(got)} staged, {len(want)} required)",
+                        fusion.name, pass_name,
+                    )
+                )
+        elif entry.solution is not None:
+            diags.extend(
+                _verify_solution(
+                    fusion.members, entry.solution, entry.solution.blocks,
+                    fusion.name, pass_name,
+                )
+            )
+        else:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN005",
+                    "planned entry carries neither a schedule solution nor "
+                    "a stitched plan",
+                    fusion.name, pass_name,
+                )
+            )
+
+        mem = entry.memory
+        if mem is not None:
+            used = mem.total_bytes + getattr(mem, "io_bytes", 0)
+            if used > opts.vmem_limit:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN006",
+                        f"VMEM plan needs {used}B > budget {opts.vmem_limit}B",
+                        fusion.name, pass_name,
+                    )
+                )
+    return diags
+
+
+def verify_shard_attrs(
+    module: Module,
+    mesh_axes,
+    param_layouts=None,
+    pass_name: str = "",
+) -> List[Diagnostic]:
+    """Shard-layout lint: re-derive every layout/partial from scratch and
+    compare against the stamped attrs; flag partial sums reaching a root."""
+    from .shard import derive_layouts, is_trivial_layout
+
+    try:
+        layouts, partial, _ = derive_layouts(module, mesh_axes, param_layouts)
+    except ValueError as e:
+        return [Diagnostic(ERROR, "PLAN007", str(e), module.name, pass_name)]
+
+    diags: List[Diagnostic] = []
+    for instr in module.instructions:
+        expected = layouts.get(instr.id)
+        stamped = instr.attrs.get("shard")
+        if expected is not None and not is_trivial_layout(expected):
+            if stamped != expected:
+                diags.append(
+                    Diagnostic(
+                        ERROR, "PLAN007",
+                        f"stamped shard {stamped!r} != derived {expected!r}",
+                        instr.name, pass_name,
+                    )
+                )
+        elif stamped is not None:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN007",
+                    f"stale shard stamp {stamped!r} (derived layout is "
+                    "trivial or unknown)",
+                    instr.name, pass_name,
+                )
+            )
+        want_partial = tuple(sorted(partial.get(instr.id, ())))
+        got_partial = tuple(instr.attrs.get("partial", ()))
+        if want_partial != got_partial:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN007",
+                    f"stamped partial {got_partial!r} != derived "
+                    f"{want_partial!r}",
+                    instr.name, pass_name,
+                )
+            )
+    for r in module.roots:
+        open_axes = tuple(sorted(partial.get(r.id, ())))
+        if open_axes:
+            diags.append(
+                Diagnostic(
+                    ERROR, "PLAN008",
+                    f"root carries an open partial sum over axes "
+                    f"{open_axes} — missing all_reduce/reduce_scatter",
+                    r.name, pass_name,
+                )
+            )
+    return diags
+
+
+# --------------------------------------------------------------------------
+# Family 3: ExecutionPlan lint
+# --------------------------------------------------------------------------
+
+
+def verify_execution_plan(ep, pass_name: str = "") -> List[Diagnostic]:
+    """Dataflow over the flat slot table + jit-segment donation audit."""
+    from .executor import _JitSegment, _step_outs
+
+    diags: List[Diagnostic] = []
+
+    def err(rule: str, subject: str, message: str) -> None:
+        diags.append(Diagnostic(ERROR, rule, message, subject, pass_name))
+
+    param_slots = {slot for _, slot, _, _ in ep._param_binds}
+    template_slots = {
+        i for i, v in enumerate(ep._template) if v is not None
+    }
+    root_slots = {s for _, s in ep._root_binds}
+
+    def _step_name(step) -> str:
+        instr = getattr(step, "instr", None)
+        if instr is not None:
+            return instr.name
+        return getattr(step.kernel, "name", "kernel")
+
+    written: Set[int] = set(param_slots) | template_slots
+    released: Set[int] = set()
+    for step in ep.steps:
+        name = _step_name(step)
+        for s in step.arg_slots:
+            if s not in written:
+                err("EXEC001", name, f"reads slot {s} before it is written")
+            elif s in released:
+                err("EXEC002", name, f"reads slot {s} after its release point")
+        for s in _step_outs(step):
+            if s in written:
+                err("EXEC001", name, f"writes slot {s} twice")
+            if s in released:
+                err("EXEC003", name, f"writes slot {s} after its release")
+            written.add(s)
+        for s in step.release:
+            if s in root_slots:
+                err("EXEC003", name, f"releases root slot {s}")
+            if s in released:
+                err("EXEC003", name, f"releases slot {s} twice")
+            if s not in written:
+                err("EXEC003", name, f"releases slot {s} that was never written")
+            released.add(s)
+    for rname, s in ep._root_binds:
+        if s not in written:
+            err("EXEC001", rname, f"root slot {s} is never produced")
+
+    # -- jit-segment donation audit -----------------------------------------
+    protected = template_slots | (param_slots - set(ep.donated_param_slots))
+    segments = ep._segments
+    # slots each segment suffix still reads, computed right-to-left
+    future_reads: List[Set[int]] = [set() for _ in segments]
+    acc: Set[int] = set()
+    for k in range(len(segments) - 1, -1, -1):
+        future_reads[k] = set(acc)
+        seg = segments[k]
+        if isinstance(seg, _JitSegment):
+            acc.update(seg.in_slots)
+        else:  # _LoopStep dispatches as its own unit
+            acc.update(seg.arg_slots)
+    for k, seg in enumerate(segments):
+        if not isinstance(seg, _JitSegment):
+            continue
+        subject = f"segment {k}"
+        for i in seg.donate:
+            if not 0 <= i < len(seg.in_slots):
+                err("EXEC004", subject, f"donate index {i} out of range")
+                continue
+            s = seg.in_slots[i]
+            if s in protected:
+                err(
+                    "EXEC004", subject,
+                    f"donates protected slot {s} (parameter/template buffer)",
+                )
+            if s not in seg.released:
+                err(
+                    "EXEC004", subject,
+                    f"donates slot {s} that stays live inside the segment",
+                )
+            if s in future_reads[k]:
+                err(
+                    "EXEC004", subject,
+                    f"donates slot {s} that a later segment still reads",
+                )
+    return diags
+
+
+# --------------------------------------------------------------------------
+# Boundary dispatch
+# --------------------------------------------------------------------------
+
+
+def verify_state(state, pass_name: str = "") -> List[Diagnostic]:
+    """Run every analysis family the state's contents support.
+
+    Called by ``PassPipeline.run`` at each verified boundary; families
+    activate as their subject matter appears (the fusion-plan lint only
+    after FusionPass has produced a plan, the ExecutionPlan lint only after
+    FinalizePass has built one), so the same entry point serves every
+    boundary of a strict run.
+    """
+    diags: List[Diagnostic] = list(verify_module(state.module, pass_name))
+
+    if state.shard_stats and getattr(state.options, "mesh_axes", None):
+        diags.extend(
+            verify_shard_attrs(
+                state.module,
+                state.options.mesh_axes,
+                state.param_layouts,
+                pass_name,
+            )
+        )
+
+    view = _plan_view(state)
+    if view is not None:
+        fusions, standalone = view
+        diags.extend(
+            verify_fusion_groups(fusions, standalone, state.module, pass_name)
+        )
+
+    if state.planned:
+        diags.extend(verify_planned_entries(state, pass_name))
+
+    executable = state.executable
+    ep = getattr(executable, "execution_plan", None)
+    if ep is not None:
+        diags.extend(verify_execution_plan(ep, pass_name))
+    return diags
+
+
+def _plan_view(state) -> Optional[Tuple[list, list]]:
+    """The (fusions, standalone) partition as it stands at this boundary:
+    the raw FusionPass plan, then the planned/demoted view once SchedulePass
+    has run, then the final executable's plan."""
+    executable = state.executable
+    if executable is not None:
+        plan = executable.plan
+        return list(plan.fusions), list(plan.standalone)
+    if state.fusion_plan is None:
+        return None
+    if state.planned or state.demoted:
+        return (
+            [p.fusion for p in state.planned],
+            list(state.fusion_plan.standalone) + list(state.demoted),
+        )
+    return list(state.fusion_plan.fusions), list(state.fusion_plan.standalone)

@@ -9,7 +9,6 @@ fused all-reduce at the end of the backward pass.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, List, Sequence, Tuple
 
 import jax
@@ -25,8 +24,8 @@ def bucket_leaves(tree, bucket_bytes: int = 16 * 1024 * 1024) -> List[List[int]]
     leaves = jax.tree.leaves(tree)
     buckets: List[List[int]] = [[]]
     size = 0
-    for i, l in enumerate(leaves):
-        b = int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    for i, leaf in enumerate(leaves):
+        b = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
         if size + b > bucket_bytes and buckets[-1]:
             buckets.append([])
             size = 0

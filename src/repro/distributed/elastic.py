@@ -10,7 +10,7 @@ free to shrink/grow).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np
@@ -48,8 +48,6 @@ def make_elastic_mesh(devices=None, prefer_model: int = 16) -> Mesh:
 
 def reshard_state(params, opt_state, new_mesh: Mesh):
     """Re-place (host or differently-sharded) state onto a new mesh."""
-    import jax.numpy as jnp
-
     from ..train.optimizer import AdamWState
     from .sharding import opt_state_shardings
 

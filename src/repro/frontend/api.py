@@ -355,7 +355,7 @@ class StitchedFunction:
             statics,
             treedef,
             tuple(
-                (tuple(np.shape(l)), str(jnp.result_type(l))) for l in leaves
+                (tuple(np.shape(leaf)), str(jnp.result_type(leaf))) for leaf in leaves
             ),
         )
         return key, leaves, static_pos, dyn_args, dyn_kwargs, len(args)
@@ -489,7 +489,7 @@ class StitchedFunction:
             )
         if entry.is_fallback:
             return self._fallback()(*args, **kwargs)
-        feeds = dict(zip(entry.lowered.param_names, leaves))
+        feeds = dict(zip(entry.lowered.param_names, leaves, strict=False))
         out = entry.compiled(feeds)
         flat = [out[n] for n in entry.lowered.output_names]
         return jax.tree_util.tree_unflatten(entry.out_tree, flat)

@@ -259,7 +259,7 @@ class _Lowerer:
             self._lower_cond(env, eqn)
             return
         outs = self._lower_value_eqn(env, eqn)
-        for var, t in zip(eqn.outvars, outs):
+        for var, t in zip(eqn.outvars, outs, strict=False):
             if not _is_dropvar(var):
                 env[var] = t
 
@@ -283,22 +283,22 @@ class _Lowerer:
                 f"({len(args)} args vs {len(inner.invars)} invars)",
             )
         live_outs = [
-            iv for ov, iv in zip(eqn.outvars, inner.outvars)
+            iv for ov, iv in zip(eqn.outvars, inner.outvars, strict=False)
             if not _is_dropvar(ov) and ov in self.live
         ]
         kept, live = _live_eqns(inner.eqns, live_outs)
         sub_env: Dict = {}
-        for var, const in zip(inner.constvars, consts):
+        for var, const in zip(inner.constvars, consts, strict=False):
             if var in live:
                 sub_env[var] = self.b.constant(np.asarray(const))
-        for var, t in zip(inner.invars, args):
+        for var, t in zip(inner.invars, args, strict=False):
             sub_env[var] = t
         saved, self.live = self.live, live
         try:
             self.lower_eqns(sub_env, kept)
         finally:
             self.live = saved
-        for outer, inner_out in zip(eqn.outvars, inner.outvars):
+        for outer, inner_out in zip(eqn.outvars, inner.outvars, strict=False):
             if not _is_dropvar(outer) and outer in self.live:
                 env[outer] = self.read(sub_env, inner_out)
 
@@ -720,10 +720,10 @@ class _Lowerer:
             live_outs = [inner.outvars[j] for j in wanted]
             kept, live = _live_eqns(inner.eqns, live_outs)
             sub_env: Dict = {}
-            for var, const in zip(inner.constvars, br.consts):
+            for var, const in zip(inner.constvars, br.consts, strict=False):
                 if var in live:
                     sub_env[var] = self.b.constant(np.asarray(const))
-            for var, t in zip(inner.invars, args):
+            for var, t in zip(inner.invars, args, strict=False):
                 sub_env[var] = t
             saved, self.live = self.live, live
             try:
@@ -777,7 +777,7 @@ def lower_jaxpr(
     kept_eqns, live = _live_eqns(jaxpr.eqns, jaxpr.outvars)
     lw.live = live
     env: Dict = {}
-    for var, const in zip(jaxpr.constvars, closed_jaxpr.consts):
+    for var, const in zip(jaxpr.constvars, closed_jaxpr.consts, strict=False):
         if var in live:
             env[var] = b.constant(np.asarray(const))
     if param_names is None:
@@ -787,7 +787,7 @@ def lower_jaxpr(
             f"{len(param_names)} param names for {len(jaxpr.invars)} jaxpr invars"
         )
     # every invar stays a parameter (the feed contract covers unused args)
-    for pname, var in zip(param_names, jaxpr.invars):
+    for pname, var in zip(param_names, jaxpr.invars, strict=False):
         env[var] = b.parameter(
             pname, tuple(var.aval.shape), np.dtype(var.aval.dtype)
         )
@@ -898,7 +898,7 @@ def lower_sharded_jaxpr(
     out_names_p = eqn.params["out_names"]
 
     outer_args = {v: i for i, v in enumerate(jaxpr.invars)}
-    consts = dict(zip(jaxpr.constvars, closed_jaxpr.consts))
+    consts = dict(zip(jaxpr.constvars, closed_jaxpr.consts, strict=False))
     if param_names is None:
         param_names = [f"arg{i}" for i in range(len(jaxpr.invars))]
     if len(param_names) != len(jaxpr.invars):
@@ -951,7 +951,7 @@ def lower_sharded_jaxpr(
 
     out_layout_by_name = {
         oname: names_to_layout(names, len(ov.aval.shape))
-        for oname, ov, names in zip(output_names, inner.outvars, out_names_p)
+        for oname, ov, names in zip(output_names, inner.outvars, out_names_p, strict=False)
     }
     out_layouts = [
         out_layout_by_name.get(r.name) for r in b.module.roots

@@ -64,11 +64,11 @@ def parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
 def _trip_count(cond_lines: List[str]) -> int:
     """Scan-lowered conditions compare the induction var to a constant."""
     const = None
-    for l in cond_lines:
-        if "compare(" in l and ("direction=LT" in l or "direction=GT" in l):
+    for ln in cond_lines:
+        if "compare(" in ln and ("direction=LT" in ln or "direction=GT" in ln):
             pass
-    for l in cond_lines:
-        m = _CONST_RE.search(l)
+    for ln in cond_lines:
+        m = _CONST_RE.search(ln)
         if m:
             v = int(m.group(1))
             const = v if const is None else max(const, v)
@@ -83,35 +83,35 @@ def collective_bytes(hlo: str) -> Dict[str, float]:
     def local_and_calls(name: str):
         coll: Dict[str, int] = {}
         calls: List[Tuple[str, int]] = []
-        for l in comps.get(name, ()):
-            if "=" not in l:
+        for ln in comps.get(name, ()):
+            if "=" not in ln:
                 continue
             for kind in _COLL_KINDS:
                 tok = kind + "("
-                idx = l.find(tok)
+                idx = ln.find(tok)
                 # guard: "-start(" variants
                 if idx < 0:
-                    idx2 = l.find(kind + "-start(")
+                    idx2 = ln.find(kind + "-start(")
                     if idx2 >= 0:
                         idx = idx2
                         tok = kind + "-start("
                 if idx < 0:
                     continue
-                head = l.split("=", 1)[1][: idx - l.find("=") - 1]
+                head = ln.split("=", 1)[1][: idx - ln.find("=") - 1]
                 b = _bytes_of_segment(head)
                 if b:
                     coll[kind] = coll.get(kind, 0) + b
                 break
-            if " while(" in l or l.startswith("while(") or "= while" in l or re.search(r"\bwhile\(", l):
-                mb = re.search(r"body=(%?[\w\.\-_]+)", l)
-                mc = re.search(r"condition=(%?[\w\.\-_]+)", l)
+            if " while(" in ln or ln.startswith("while(") or "= while" in ln or re.search(r"\bwhile\(", ln):
+                mb = re.search(r"body=(%?[\w\.\-_]+)", ln)
+                mc = re.search(r"condition=(%?[\w\.\-_]+)", ln)
                 if mb and mc:
                     trips = _trip_count(comps.get(mc.group(1).lstrip("%"), []))
                     calls.append((mb.group(1).lstrip("%"), trips))
             else:
                 for key in ("calls=", "body=", "branch_computations={"):
-                    if key in l:
-                        for nm in re.findall(r"(?:calls=|body=)(%?[\w\.\-_]+)", l):
+                    if key in ln:
+                        for nm in re.findall(r"(?:calls=|body=)(%?[\w\.\-_]+)", ln):
                             calls.append((nm.lstrip("%"), 1))
                         break
         return coll, calls

@@ -23,7 +23,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-from ..configs import ARCHITECTURES, SHAPES, get_config
+from ..configs import SHAPES, get_config
 from ..core.latency import TPU_V5E, LatencyModel
 
 # Derived from the single DeviceSpec in core/latency.py — these module

@@ -12,7 +12,6 @@ config end-to-end with the identical code path minus the mesh.
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import numpy as np

@@ -9,7 +9,7 @@ partitioning; sharding constraints live in repro.distributed.sharding.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -159,7 +159,7 @@ def online_attention(
         qc = q_[:, iq].astype(jnp.float32) * scale   # (B, cq, Hkv, G, hd)
 
         def kv_step(carry, ik):
-            m, l, acc = carry
+            m, denom, acc = carry
             kc = k_[:, ik].astype(jnp.float32)       # (B, ck, Hkv, hd)
             vc = v_[:, ik].astype(jnp.float32)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc)
@@ -174,19 +174,19 @@ def online_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + jnp.sum(p, axis=-1)
+            denom_new = denom * alpha + jnp.sum(p, axis=-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p, vc
             )
-            return (m_new, l_new, acc_new), None
+            return (m_new, denom_new, acc_new), None
 
         init = (
             jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32),
             jnp.zeros((B, Hkv, G, cq), jnp.float32),
             jnp.zeros((B, Hkv, G, cq, hd), jnp.float32),
         )
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
-        out = acc / l[..., None]                      # (B, Hkv, G, cq, hd)
+        (m, denom, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / denom[..., None]                      # (B, Hkv, G, cq, hd)
         # cast BEFORE the outer scan stacks chunks (f32 stacking doubles the
         # activation output footprint at 32k sequence lengths)
         return out.transpose(0, 3, 1, 2, 4).astype(out_dtype)  # (B,cq,Hkv,G,hd)

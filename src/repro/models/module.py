@@ -5,7 +5,6 @@ for allocation-free multi-pod dry-runs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -72,9 +71,9 @@ def count_params(tree) -> int:
     leaves = jax.tree.leaves(tree)
     return int(
         sum(
-            int(np.prod(l.shape))
-            for l in leaves
-            if hasattr(l, "shape")
+            int(np.prod(leaf.shape))
+            for leaf in leaves
+            if hasattr(leaf, "shape")
         )
     )
 
@@ -82,8 +81,8 @@ def count_params(tree) -> int:
 def tree_bytes(tree) -> int:
     return int(
         sum(
-            int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
-            for l in jax.tree.leaves(tree)
-            if hasattr(l, "shape")
+            int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(tree)
+            if hasattr(leaf, "shape")
         )
     )

@@ -134,7 +134,7 @@ def run_trace(engine, trace: List[TraceEntry], max_ticks: int = 100_000,
         Request(e.rid, e.prompt, max_new_tokens=e.max_new_tokens)
         for e in pending
     ]
-    queue = list(zip(pending, reqs))
+    queue = list(zip(pending, reqs, strict=False))
     inflight_sum = 0
     max_inflight = 0
     t0 = time.perf_counter()

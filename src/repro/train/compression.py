@@ -54,7 +54,7 @@ def compress_int8_ef(grads, state: EFState) -> Tuple[Any, Any, EFState]:
 
     flat_g, td = jax.tree.flatten(grads)
     flat_r = jax.tree.leaves(state.residual)
-    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r, strict=False)]
     wire = jax.tree.unflatten(td, [o[0] for o in outs])
     deq = jax.tree.unflatten(td, [o[1] for o in outs])
     new_res = jax.tree.unflatten(td, [o[2] for o in outs])
@@ -73,7 +73,7 @@ def wire_bytes(tree) -> int:
     import numpy as np
 
     total = 0
-    for l in jax.tree.leaves(tree):
-        if hasattr(l, "shape"):
-            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
     return total

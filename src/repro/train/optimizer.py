@@ -7,7 +7,7 @@ ZeRO-style partitioned optimizer state under the fsdp axes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,7 @@ def lr_at(cfg: AdamWConfig, step) -> jax.Array:
 
 
 def global_norm(tree) -> jax.Array:
-    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    leaves = [jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
@@ -68,7 +68,9 @@ def _decay_mask(path: Tuple, leaf) -> bool:
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),
@@ -78,7 +80,9 @@ def adamw_init(params) -> AdamWState:
 
 def adamw_init_specs(param_specs) -> AdamWState:
     """ShapeDtypeStruct mirror for dry runs."""
-    sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def sds(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
     return AdamWState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         m=jax.tree.map(sds, param_specs),
@@ -110,7 +114,7 @@ def adamw_update(
     flat_g = jax.tree.leaves(grads)
     flat_m = jax.tree.leaves(state.m)
     flat_v = jax.tree.leaves(state.v)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=False)]
     new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +64,7 @@ def make_loss_fn(cfg):
             logits = L.unembed(params["embed"], hidden).astype(jnp.float32)
             return cross_entropy(logits, labels, cfg.vocab_size)
         h = jnp.moveaxis(hidden.reshape(B, nc, c, d), 1, 0)       # (nc,B,c,d)
-        l = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+        lab = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
 
         def step(carry, xs):
             tot, cnt = carry
@@ -73,7 +73,7 @@ def make_loss_fn(cfg):
             t, n = cross_entropy_sums(logits, lc, cfg.vocab_size)
             return (tot + t, cnt + n), None
 
-        (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), (h, l))
+        (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), (h, lab))
         return tot / jnp.maximum(cnt, 1.0)
 
     return loss_fn
@@ -104,11 +104,11 @@ def make_train_step(
 
             def acc_step(carry, mb):
                 gsum, lsum = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                lval, g = jax.value_and_grad(loss_fn)(params, mb)
                 gsum = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), gsum, g
                 )
-                return (gsum, lsum + l), None
+                return (gsum, lsum + lval), None
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params

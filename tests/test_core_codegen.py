@@ -1,7 +1,6 @@
 """IrEmitterStitched: generated Pallas kernels vs the pure-jnp oracle."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import compile_and_compare
 from repro.core import trace

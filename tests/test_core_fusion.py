@@ -1,7 +1,5 @@
 """Deep fusion algorithm (paper §3.2, Algorithm 1) structural tests."""
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import (
     FusionConfig,

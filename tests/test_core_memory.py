@@ -1,7 +1,6 @@
 """VMEM (shared-memory) planning: requirements, shrinking, dominance sharing
 (paper §5.1)."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import GraphBuilder, MemoryInfeasible, Sched, plan_memory, resolve_schedules
@@ -84,14 +83,14 @@ def test_dominance_tree_on_diamond():
     b = GraphBuilder()
     x = b.parameter("x", (4, 4), jnp.float32)
     e = b.exp(x)                   # diamond top
-    l, r = e + 1.0, e * 2.0
-    root = l / r                   # diamond bottom (root)
+    lhs, rhs = e + 1.0, e * 2.0
+    root = lhs / rhs                   # diamond bottom (root)
     m = b.module
     members = [i for i in m.instructions if i.opcode != "parameter"]
     idom = dominance_tree(members, [root.instr])
     assert dominates(root.instr.id, e.instr.id, idom)      # root dominates all
-    assert not dominates(l.instr.id, e.instr.id, idom)     # side of diamond no
-    assert not dominates(r.instr.id, e.instr.id, idom)
+    assert not dominates(lhs.instr.id, e.instr.id, idom)   # side of diamond no
+    assert not dominates(rhs.instr.id, e.instr.id, idom)
 
 
 def test_space_sharing_dominator_reuses_dead_slot():

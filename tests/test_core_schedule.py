@@ -51,7 +51,7 @@ def test_block_index_covers_workspace(dims, data):
     for b in range(blocks):
         idx = block_index(shape, sched, b)
         sl = tuple(
-            slice(i * c, (i + 1) * c) for i, c in zip(idx, cs)
+            slice(i * c, (i + 1) * c) for i, c in zip(idx, cs, strict=False)
         )
         seen[sl] += 1
     assert (seen == 1).all(), f"{sched} does not tile {shape}"

@@ -1,6 +1,5 @@
 """Work/Span analysis properties (paper §3.1)."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

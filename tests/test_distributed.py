@@ -99,20 +99,20 @@ def test_every_arch_params_have_valid_specs():
         cfg = get_config(name)
         specs = param_specs(cfg)
 
-        def walk(path, node, stacked):
+        def walk(path, node, stacked, arch=name):
             if isinstance(node, dict):
                 for k, v in node.items():
                     walk(f"{path}/{k}", v, stacked or k in ("layers", "enc_layers"))
                 return
             spec = param_spec(path, tuple(node.shape), MESH2, stacked=stacked)
-            for dim, ax in zip(node.shape, tuple(spec) + (None,) * 8):
+            for dim, ax in zip(node.shape, tuple(spec) + (None,) * 8, strict=False):
                 if ax is None:
                     continue
                 axes = ax if isinstance(ax, tuple) else (ax,)
                 size = 1
                 for a in axes:
                     size *= MESH2.shape[a]
-                assert dim % size == 0, (name, path, node.shape, spec)
+                assert dim % size == 0, (arch, path, node.shape, spec)
 
         walk("", specs, False)
 

@@ -43,7 +43,7 @@ def test_checkpoint_roundtrip(tmp_path):
     mgr.save(3, params, opt)
     p2, o2, step = mgr.restore(3, params, opt)
     assert step == 3
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2), strict=False):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -87,7 +87,7 @@ def test_restart_resumes_bit_exact(tmp_path):
     t2 = _mk_trainer(tmp_path / "x", cfg)
     p2, _, step = t2.run(jax.tree.map(jnp.copy, params0))
     assert step == 12
-    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2), strict=False):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -134,5 +134,5 @@ def test_elastic_remesh_and_reshard():
     params = init_params(cfg, 0)
     mesh = make_elastic_mesh(jax.devices(), prefer_model=1)
     p2, _ = reshard_state(params, None, mesh)
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2), strict=False):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

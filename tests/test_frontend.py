@@ -35,7 +35,7 @@ def assert_tree_close(a, b, rtol=2e-5, atol=2e-5):
     la = jax.tree_util.tree_leaves(a)
     lb = jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=False):
         np.testing.assert_allclose(
             np.asarray(x, dtype=np.float64),
             np.asarray(y, dtype=np.float64),

@@ -31,7 +31,7 @@ def assert_tree_bitwise(a, b):
     la = jax.tree_util.tree_leaves(a)
     lb = jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=False):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

@@ -1,6 +1,5 @@
 """The unified LatencyModel: single device spec, per-op/per-fusion time."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (

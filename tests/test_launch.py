@@ -2,12 +2,11 @@
 jaxpr cost model, HLO collective census (no 512-device requirement)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.costmodel import fn_cost, jaxpr_cost
+from repro.launch.costmodel import fn_cost
 from repro.launch.dryrun import cell_is_skipped, input_specs
-from repro.launch.hlostats import collective_bytes, parse_computations
+from repro.launch.hlostats import collective_bytes
 from repro.configs import ARCHITECTURES, SHAPES
 
 
@@ -16,7 +15,7 @@ def test_input_specs_cover_every_cell():
         for shape in SHAPES:
             specs = input_specs(arch, shape)
             leaves = jax.tree.leaves(specs)
-            assert leaves and all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            assert leaves and all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in leaves)
             if SHAPES[shape]["kind"] == "decode":
                 assert specs["tokens"].shape == (SHAPES[shape]["global_batch"],)
 
@@ -112,7 +111,6 @@ def test_collective_census_scales_by_trip_count():
 def test_one_device_cell_lowers_and_compiles():
     """End-to-end build_cell on a 1x1 mesh with a reduced arch — keeps the
     dry-run path under pytest without 512 host devices."""
-    import dataclasses
 
     from repro.launch import dryrun as dr
     from repro.configs import get_config, reduced_config
@@ -122,7 +120,7 @@ def test_one_device_cell_lowers_and_compiles():
     cfg = reduced_config(get_config("qwen1.5-0.5b"))
     orig_get, orig_shapes = dr.get_config, dict(dr.SHAPES)
     try:
-        dr.get_config = lambda name: cfg
+        dr.get_config = lambda name: cfg  # noqa: E731
         dr.SHAPES["tiny"] = dict(seq_len=16, global_batch=2, kind="train")
         with mesh:
             fn, args, raw = dr.build_cell("qwen1.5-0.5b", "tiny", mesh, 1)

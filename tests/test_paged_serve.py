@@ -309,7 +309,7 @@ def test_generate_trace_deterministic_and_sorted():
     a = generate_trace(tc)
     b = generate_trace(tc)
     assert [e.arrive_tick for e in a] == [e.arrive_tick for e in b]
-    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b, strict=False))
     ticks = [e.arrive_tick for e in a]
     assert ticks == sorted(ticks)
     with pytest.raises(ValueError, match="arrival"):

@@ -1,7 +1,6 @@
 """Pass pipeline, fusion signatures, kernel cache, and the planned runtime."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import compile_and_compare, make_feeds as _feeds
 from repro.core import (
@@ -65,7 +64,7 @@ def test_signature_differs_on_constant_value():
 def _stacked_module(n_layers):
     def f(b, x, *weights):
         gs, Ws = weights[:n_layers], weights[n_layers:]
-        for g, W in zip(gs, Ws):
+        for g, W in zip(gs, Ws, strict=False):
             ms = b.reduce(b.square(x), (1,), "mean")
             inv = b.rsqrt(ms + 1e-6)
             normed = (
@@ -225,7 +224,7 @@ def test_pass_times_cover_all_stages(rng):
     comp = compile_and_compare(m, _feeds(m, rng))
     assert set(comp.stats.pass_times) == {
         "submodule", "sharding", "fusion", "schedule", "memory", "codegen",
-        "autotune", "finalize",
+        "autotune", "finalize", "verify",
     }
     assert comp.stats.compile_time_s > 0
 

@@ -230,7 +230,7 @@ def test_eager_release_drops_buffers(rng):
     buf = list(ep._template)
     for (name, slot, dtype, shape), v in zip(
         ep._param_binds, ep._bind_feeds(feeds)
-    ):
+    , strict=False):
         buf[slot] = v
     from repro.core.executor import _KernelStep
     from repro.core.ir import apply_op
@@ -238,7 +238,7 @@ def test_eager_release_drops_buffers(rng):
     for step in ep.steps:
         if type(step) is _KernelStep:
             outs = step.kernel(*[buf[s] for s in step.arg_slots])
-            for s, o in zip(step.out_slots, outs):
+            for s, o in zip(step.out_slots, outs, strict=False):
                 buf[s] = o
         else:
             buf[step.out_slot] = apply_op(

@@ -6,7 +6,7 @@ import pytest
 pytestmark = pytest.mark.slow
 
 from repro.configs import get_config, reduced_config
-from repro.models import decode_step, init_cache, init_params
+from repro.models import init_cache, init_params
 from repro.serve import Request, ServeEngine
 
 

@@ -61,8 +61,8 @@ def test_grad_clip():
 def test_cross_entropy_masks_padded_vocab_and_labels():
     logits = jnp.zeros((1, 3, 8), jnp.float32)
     labels = jnp.asarray([[1, 2, -1]], jnp.int32)     # last position ignored
-    l = cross_entropy(logits, labels, vocab_size=5)   # cols 5..7 padded out
-    assert abs(float(l) - np.log(5)) < 1e-5           # uniform over 5 classes
+    loss = cross_entropy(logits, labels, vocab_size=5)  # cols 5..7 padded out
+    assert abs(float(loss) - np.log(5)) < 1e-5           # uniform over 5 classes
 
 
 def test_loss_decreases_on_tiny_model():
@@ -92,7 +92,7 @@ def test_grad_accumulation_matches_full_batch():
     p1, _, m1 = step1(params, adamw_init(params), batch)
     p4, _, m4 = step4(params, adamw_init(params), batch)
     assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4), strict=False):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32),
             rtol=2e-3, atol=2e-4,
